@@ -1,0 +1,174 @@
+"""Block-STM engine benchmarks mirroring the paper's evaluation (§4.1).
+
+One function per paper figure:
+  Fig 3/6 -> bench_threads     (throughput vs #virtual threads, Diem & Aptos
+                                read/write profiles, + Bohm-style baseline)
+  Fig 4/7 -> bench_contention  (throughput vs #accounts: 2 / 10 / 100 / 1e3 / 1e4)
+  Fig 5/8 -> bench_blocksize   (throughput vs block size)
+  sequential baseline          (pure-Python sequential execution, the paper's
+                                denominator; plus a jitted 1-window engine run)
+
+CPU wall-clock replaces the paper's 32-core Rust numbers; the comparable
+quantities are the *shapes* of the curves and the abort/incarnation
+statistics, which are hardware-independent.  Results go to CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import workloads as W
+from repro.core.engine import make_executor
+from repro.core.vm import run_sequential
+
+DIEM = dict(cfg_reads=W.CHAIN_CFG_READS_DIEM)      # 21 reads / 4 writes
+APTOS = dict(cfg_reads=W.CHAIN_CFG_READS_APTOS)    # 8 reads / 5 writes
+
+
+def _run_engine(spec, n_txns, window, seed=0, reps=3, backend="sorted",
+                validation_window=0):
+    cfg = W.p2p_engine_config(spec, n_txns, window=window, backend=backend,
+                              validation_window=validation_window)
+    run = make_executor(W.p2p_program(spec), cfg)
+    params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
+    res = run(params, storage)                      # compile + warm
+    res.snapshot.block_until_ready()
+    assert bool(res.committed)
+    times = []
+    for r in range(reps):
+        params, storage = W.make_p2p_block(spec, n_txns, seed=seed + r)
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    t = float(np.median(times))
+    return dict(tps=n_txns / t, seconds=t, waves=int(res.waves),
+                execs=int(res.execs), dep_aborts=int(res.dep_aborts),
+                val_aborts=int(res.val_aborts))
+
+
+def _run_sequential(spec, n_txns, seed=0):
+    params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
+    t0 = time.perf_counter()
+    run_sequential(W.p2p_program(spec), params, storage, n_txns)
+    t = time.perf_counter() - t0
+    return dict(tps=n_txns / t, seconds=t)
+
+
+def _run_bohm(spec, n_txns, window, seed=0):
+    """Bohm [21] with perfect write sets (real implementation,
+    core/baselines.py): dependency-exact fork-join schedule, zero wasted
+    executions.  Write-set extraction (the information the paper grants Bohm
+    'artificially') is excluded from the timing, as in the paper."""
+    import jax
+    from repro.core import baselines as B
+    cfg = W.p2p_engine_config(spec, n_txns, window=window)
+    params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
+    pws = B.perfect_write_sets(W.p2p_program(spec), params, storage, cfg)
+    run = jax.jit(lambda p, s: B.run_bohm(W.p2p_program(spec), p, s, cfg,
+                                          pws))
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    t0 = time.perf_counter()
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    t = time.perf_counter() - t0
+    return dict(tps=n_txns / t, seconds=t)
+
+
+def _run_litm(spec, n_txns, seed=0):
+    """LiTM [52]-style deterministic STM rounds (core/baselines.py)."""
+    import jax
+    from repro.core import baselines as B
+    cfg = W.p2p_engine_config(spec, n_txns)
+    params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
+    run = jax.jit(lambda p, s: B.run_litm(W.p2p_program(spec), p, s, cfg))
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    t0 = time.perf_counter()
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    t = time.perf_counter() - t0
+    return dict(tps=n_txns / t, seconds=t, execs=int(res.execs))
+
+
+def bench_threads(rows, profile_name, profile, n_txns=1000, accounts=1000):
+    spec = W.P2PSpec(n_accounts=accounts, **profile)
+    seq = _run_sequential(spec, n_txns)
+    rows.append((f"fig3_{profile_name}_seq", seq["seconds"] * 1e6 / n_txns,
+                 f"tps={seq['tps']:.0f}"))
+    for vthreads in (1, 2, 4, 8, 16, 32):
+        r = _run_engine(spec, n_txns, window=vthreads)
+        rows.append((f"fig3_{profile_name}_bstm_t{vthreads}",
+                     r["seconds"] * 1e6 / n_txns,
+                     f"tps={r['tps']:.0f};speedup={r['tps']/seq['tps']:.2f};"
+                     f"execs={r['execs']};waves={r['waves']}"))
+    b = _run_bohm(spec, n_txns, window=32)
+    rows.append((f"fig3_{profile_name}_bohm_t32", b["seconds"] * 1e6 / n_txns,
+                 f"tps={b['tps']:.0f}"))
+    l = _run_litm(spec, n_txns)
+    rows.append((f"fig3_{profile_name}_litm", l["seconds"] * 1e6 / n_txns,
+                 f"tps={l['tps']:.0f};execs={l['execs']}"))
+
+
+def bench_contention(rows, profile_name, profile, n_txns=1000):
+    for accounts in (2, 10, 100, 1000, 10000):
+        spec = W.P2PSpec(n_accounts=accounts, **profile)
+        seq = _run_sequential(spec, n_txns)
+        r = _run_engine(spec, n_txns, window=32)
+        rows.append((f"fig4_{profile_name}_acc{accounts}",
+                     r["seconds"] * 1e6 / n_txns,
+                     f"tps={r['tps']:.0f};seq_tps={seq['tps']:.0f};"
+                     f"speedup={r['tps']/seq['tps']:.2f};"
+                     f"execs_per_txn={r['execs']/n_txns:.2f};"
+                     f"val_aborts={r['val_aborts']}"))
+        # beyond-paper optimized variant (§Perf): windowed validation,
+        # dense MV backend when the location universe is tiny (<=64 locs;
+        # measured crossover — at L~200 the per-wave dense table rebuild
+        # costs more than the sort it replaces)
+        backend = "dense" if spec.n_locs <= 64 else "sorted"
+        o = _run_engine(spec, n_txns, window=32, validation_window=128,
+                        backend=backend)
+        rows.append((f"fig4_{profile_name}_acc{accounts}_opt",
+                     o["seconds"] * 1e6 / n_txns,
+                     f"tps={o['tps']:.0f};speedup={o['tps']/seq['tps']:.2f};"
+                     f"vs_base={o['tps']/r['tps']:.2f}x;backend={backend}"))
+
+
+def bench_blocksize(rows, profile_name, profile, accounts=1000):
+    for n_txns in (100, 1000, 5000, 10000):
+        spec = W.P2PSpec(n_accounts=accounts, **profile)
+        r = _run_engine(spec, n_txns, window=32, reps=2)
+        rows.append((f"fig5_{profile_name}_n{n_txns}",
+                     r["seconds"] * 1e6 / n_txns,
+                     f"tps={r['tps']:.0f};waves={r['waves']}"))
+        # optimized: window scales with block size + windowed validation
+        w = max(32, min(256, n_txns // 64))
+        o = _run_engine(spec, n_txns, window=w, validation_window=4 * w,
+                        reps=2)
+        rows.append((f"fig5_{profile_name}_n{n_txns}_opt",
+                     o["seconds"] * 1e6 / n_txns,
+                     f"tps={o['tps']:.0f};waves={o['waves']};window={w};"
+                     f"vs_base={o['tps']/r['tps']:.2f}x"))
+
+
+def bench_backends(rows, n_txns=512, accounts=200):
+    for backend in ("sorted", "dense"):
+        spec = W.P2PSpec(n_accounts=accounts)
+        r = _run_engine(spec, n_txns, window=32, backend=backend)
+        rows.append((f"backend_{backend}", r["seconds"] * 1e6 / n_txns,
+                     f"tps={r['tps']:.0f}"))
+
+
+def run_all(fast: bool = True):
+    rows: list = []
+    profiles = [("aptos", APTOS), ("diem", DIEM)]
+    n = 512 if fast else 1000
+    for name, prof in profiles:
+        bench_threads(rows, name, prof, n_txns=n)
+        bench_contention(rows, name, prof, n_txns=n)
+    bench_blocksize(rows, "aptos", APTOS)
+    bench_backends(rows)
+    return rows

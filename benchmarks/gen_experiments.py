@@ -1,0 +1,140 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON (narrative sections are maintained in the template below).
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.roofline import load, render, summarize
+
+HEADER = """# EXPERIMENTS
+
+Hardware target: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+per chip; 16 GB HBM. Meshes: `pod16x16` = (data 16, model 16) = 256 chips;
+`2pod_2x16x16` = (pod 2, data 16, model 16) = 512 chips.
+
+Accounting sources (see `src/repro/launch/hlo_analysis.py` / `analytic.py`):
+* **flops/dev** — trip-count-aware walk of the compiled, partitioned HLO
+  (dot/conv FLOPs × while-loop trip counts). `cost_analysis()` alone counts
+  every `lax.scan` body once and under-reports a 96-layer model ~50×.
+* **collectives/dev** — per-op link bytes from the same walk (all-gather at
+  result size, all-reduce at 2× operand, reduce-scatter/all-to-all/permute at
+  operand size).
+* **memory term** — analytic HBM model (params+grads+optimizer+activations+
+  cache traffic). The CPU-backend HLO legalizes every bf16 dot via f32
+  converts which get loop-hoisted into f32 copies of scanned weights/caches;
+  byte counts read off that HLO overstate TPU traffic 2-10× (evidenced below),
+  so the analytic model is authoritative for the memory term. The raw HLO
+  bytes are retained in the JSON (`bytes_dev_hlo`).
+* Known CPU-lowering distortions, documented and adjusted where stated:
+  (1) f32 legalization of bf16 ops (affects `memory_analysis()` temp sizes
+  and AR payload dtypes, ~2×); (2) the CPU SPMD partitioner emits
+  all-reduce where the TPU partitioner emits reduce-scatter+all-gather pairs
+  for sharded-consumer reductions (b/433785288), up to 2× on grad traffic.
+
+"""
+
+DRYRUN_NOTES = """
+## §Dry-run
+
+All 40 (architecture × shape) cells lower AND compile for both production
+meshes — 32 compiled cells + 8 structurally-skipped `long_500k` cells per
+mesh (full-attention archs; sub-quadratic mixing required — DESIGN.md §6;
+`zamba2-1.2b` (hybrid) and `falcon-mamba-7b` (SSM) run it). `decode_*` cells
+lower `serve_step` (one token against a seq_len KV cache/SSM state);
+`train_4k` lowers the full jitted train step (grad accumulation + AdamW with
+per-arch state compression); `prefill_32k` lowers the forward path with
+last-position unembedding.
+
+Per-device memory (from `compiled.memory_analysis()`, CPU-inflated by f32
+legalization — see header):
+
+{memtable}
+
+HBM-fit notes (16 GB budget):
+* `llama4-maverick-400b-a17b` (775B total params from the assigned config)
+  fits single-pod ONLY with int8 optimizer state (~1.03 B/param/moment;
+  `optim/adamw.py`) + bf16 grad accumulation: params 6.1 GiB + m/v 3.2 GiB
+  + activations. With f32 Adam it requires ≥2 pods.
+* `nemotron-4-340b` uses bf16 m/v + bf16 grad accumulation + microbatch 4.
+* `qwen1.5-110b` decode runs TP-resident (see §Perf cell 3): params 13.9 GiB
+  + 32k cache 2.7 GiB exceeds 16 GiB by ~0.6 GiB at batch 128 — production
+  deployment reduces decode batch to 96 or int8-quantizes weights; both
+  variants compile and are recorded.
+* Remaining >16 GiB `temp` readings are dominated by the CPU-backend f32
+  copies of bf16 buffers (e.g. gemma decode: a bit-identical graph measured
+  71 GB HLO bytes vs 0.6 GB analytic; factor confirmed by inspecting the f32
+  convert-fusions in the loop bodies).
+"""
+
+ROOFLINE_NOTES = """
+## §Roofline
+
+Terms are seconds per step per device: `compute = flops_dev / 197e12`,
+`memory = bytes_dev / 819e9` (analytic), `collective = link_bytes_dev / 50e9`.
+`useful_flops` = MODEL_FLOPS/chips ÷ HLO flops_dev, where MODEL_FLOPS =
+6·N·tokens (train), 2·N·tokens (prefill), 2·N_active·batch (decode).
+`roofline_frac` = (MODEL_FLOPS/chips ÷ 197e12) ÷ max(term) — the score being
+hill-climbed in §Perf.
+
+Single-pod (256 chips):
+
+{single}
+
+Multi-pod (512 chips, 2 pods — proves the `pod` axis shards; gradient
+all-reduce crosses the pod axis, everything else stays pod-local):
+
+{multi}
+
+Reading the table:
+* **train** cells are collective-bound across the board — FSDP weight
+  gathers + grad reductions dominate (the CPU partitioner's AR-for-RS
+  substitution inflates the absolute numbers up to 2×, but the bound is real:
+  at bf16 with RS the biggest cells remain collective-dominated).
+* **prefill** cells for wide dense archs are compute-bound: the chunked
+  causal attention computes the full S² score matrix (2× the causal-optimal
+  FLOPs) — the Pallas flash kernel (kv-block skipping) removes this on real
+  TPU; `useful_flops` quantifies the gap per cell.
+* **decode** cells are memory-bound once weights are TP-resident (§Perf
+  cell 3); batch-128 single-token steps can never reach compute roofline at
+  2·N·B model FLOPs — tok/s/chip is the operative metric
+  (memory_s ≈ params+cache bytes / 819 GB/s per token).
+* `useful_flops > 1` on some decode cells: MoE top-k routing executes only
+  experts with ≥1 token at decode; MODEL_FLOPS counts nominal top-k actives.
+"""
+
+
+def mem_table(results) -> str:
+    rows = ["| arch | shape | mesh | args GiB | temp GiB | compile s |",
+            "|---|---|---|---|---|---|"]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok" or not r.get("memory"):
+            continue
+        m = r["memory"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{m.get('argument_size_in_bytes', 0)/2**30:.2f} | "
+            f"{m.get('temp_size_in_bytes', 0)/2**30:.2f} | "
+            f"{r['compile_s']:.1f} |")
+    return "\n".join(rows)
+
+
+def main():
+    results = load("benchmarks/results/dryrun.json")
+    out = [HEADER]
+    out.append(DRYRUN_NOTES.format(memtable=mem_table(results)))
+    out.append(ROOFLINE_NOTES.format(
+        single=render(results, "pod16x16"),
+        multi=render(results, "2pod_2x16x16")))
+    s = summarize(results)
+    out.append(f"\nCell count: {s['n_ok']} compiled OK, {s['n_skipped']} "
+               f"skipped (documented), {s['n_failed']} failed.\n")
+    with open("benchmarks/perf_notes.md") as f:
+        out.append(f.read())
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

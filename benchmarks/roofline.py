@@ -1,0 +1,85 @@
+"""Roofline table generator: reads the dry-run JSON and renders
+EXPERIMENTS.md §Roofline rows (also usable standalone).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--json benchmarks/results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.launch.drylib import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"{r['status'].upper()} — {r['note'][:60]} | | | | | |")
+    rf = r.get("roofline") or {}
+    return ("| {arch} | {shape} | {mesh} | {c:.2e} | {m:.2e} | {k:.2e} | "
+            "{bound} | {useful:.2f} | {frac:.3f} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                c=rf.get("compute_s", 0), m=rf.get("memory_s", 0),
+                k=rf.get("collective_s", 0), bound=rf.get("bound", "?"),
+                useful=rf.get("useful_flops_ratio", 0),
+                frac=rf.get("roofline_fraction", 0)))
+
+
+def render(results, mesh_filter=None) -> str:
+    lines = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bound | useful_flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda r: (r["arch"], r["shape"], r["mesh"])
+    for r in sorted(results, key=key):
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def summarize(results) -> dict:
+    ok = [r for r in results if r["status"] == "ok"]
+    worst = sorted((r for r in ok if r.get("roofline")),
+                   key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = sorted((r for r in ok if r.get("roofline")),
+                  key=lambda r: -r["roofline"]["collective_s"])
+    return {
+        "n_ok": len(ok),
+        "n_skipped": sum(r["status"] == "skipped" for r in results),
+        "n_failed": sum(r["status"] == "failed" for r in results),
+        "worst_fraction": [(r["arch"], r["shape"], r["mesh"],
+                            r["roofline"]["roofline_fraction"])
+                           for r in worst[:5]],
+        "most_collective_bound": [(r["arch"], r["shape"], r["mesh"],
+                                   r["roofline"]["collective_s"])
+                                  for r in coll[:5]],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="benchmarks/results/dryrun.json")
+    args = ap.parse_args(argv)
+    results = load(args.json)
+    print(f"# hardware: {PEAK_FLOPS/1e12:.0f} TFLOP/s bf16, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s ICI per chip")
+    print(render(results))
+    print()
+    s = summarize(results)
+    print(f"# {s['n_ok']} ok / {s['n_skipped']} skipped / "
+          f"{s['n_failed']} failed")
+    print("# worst roofline fractions:", s["worst_fraction"])
+    print("# most collective-bound:", s["most_collective_bound"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,78 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * Block-STM engine benchmarks (paper Figs 3-8 analogues + backends)
+  * model micro-benchmarks (per-arch reduced-config step wall-clock on CPU)
+  * roofline summary (from the dry-run JSON if present)
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def bench_models(rows, steps=3):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, reduced_config
+    from repro.models import model as MDL
+    from repro.optim import adamw
+    from repro.runtime import steps as RT
+
+    for name in sorted(ARCHS):
+        cfg = reduced_config(ARCHS[name])
+        opt_cfg = adamw.AdamWConfig(total_steps=100)
+        state = RT.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg,
+                                    jnp.float32)
+        batch = MDL.make_host_batch(cfg, batch=2, seq=32)
+        step_fn = jax.jit(RT.make_train_step(cfg, opt_cfg))
+        state, m = step_fn(state, batch)          # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = step_fn(state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = (time.perf_counter() - t0) / steps
+        rows.append((f"train_step_reduced_{name}", dt * 1e6,
+                     f"loss={float(m['loss']):.3f}"))
+
+
+def roofline_rows(rows):
+    path = "benchmarks/results/dryrun.json"
+    if not os.path.exists(path):
+        rows.append(("roofline", 0.0, "dryrun.json missing - run "
+                     "repro.launch.dryrun first"))
+        return
+    from benchmarks.roofline import load, summarize
+    s = summarize(load(path))
+    rows.append(("dryrun_cells_ok", float(s["n_ok"]),
+                 f"skipped={s['n_skipped']};failed={s['n_failed']}"))
+    for arch, shape, mesh, frac in s["worst_fraction"][:3]:
+        rows.append((f"roofline_frac_{arch}_{shape}_{mesh}", frac, "worst-3"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    ap.add_argument("--skip-models", action="store_true")
+    args = ap.parse_args()
+
+    rows: list = []
+    from benchmarks import engine_bench
+    rows += engine_bench.run_all(fast=args.fast)
+    if not args.skip_models:
+        bench_models(rows)
+    roofline_rows(rows)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Figure 4/7 analogue: Block-STM behavior across contention levels.
+
+Sweeps the account count (2 = fully sequential ... 10k = embarrassingly
+parallel) and prints the abort/incarnation profile plus measured CPU
+throughput vs the sequential baseline.
+
+  PYTHONPATH=src python examples/bank_contention.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import workloads as W
+from repro.core.engine import make_executor
+from repro.core.vm import run_sequential
+
+
+def main():
+    n_txns = 512
+    print(f"{'accounts':>9} {'waves':>6} {'exec/txn':>9} {'dep_ab':>7} "
+          f"{'val_ab':>7} {'engine_tps':>11} {'seq_tps':>9} {'speedup':>8}")
+    for accounts in (2, 10, 100, 1000, 10000):
+        spec = W.P2PSpec(n_accounts=accounts)
+        cfg = W.p2p_engine_config(spec, n_txns, window=32)
+        run = make_executor(W.p2p_program(spec), cfg)
+        params, storage = W.make_p2p_block(spec, n_txns, seed=0)
+        res = run(params, storage)          # warm/compile
+        res.snapshot.block_until_ready()
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        expected = run_sequential(W.p2p_program(spec), params, storage,
+                                  n_txns)
+        dt_seq = time.perf_counter() - t0
+        assert np.array_equal(np.asarray(res.snapshot), expected)
+        print(f"{accounts:>9} {int(res.waves):>6} "
+              f"{int(res.execs)/n_txns:>9.2f} {int(res.dep_aborts):>7} "
+              f"{int(res.val_aborts):>7} {n_txns/dt:>11.0f} "
+              f"{n_txns/dt_seq:>9.0f} {dt_seq/dt:>8.2f}")
+    print("\n(2 accounts = inherently sequential: the engine degrades "
+          "gracefully; 10k accounts = conflict-free: ~1 incarnation/txn, "
+          "matching paper §4.1.)")
+
+
+if __name__ == "__main__":
+    main()

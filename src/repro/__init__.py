@@ -1,0 +1,4 @@
+"""repro: Block-STM on TPU — deterministic parallel block execution (JAX)
++ a multi-pod LM training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

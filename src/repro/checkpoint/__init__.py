@@ -1,0 +1,1 @@
+"""Async, atomic, keep-K checkpointing with elastic restore."""

@@ -1,0 +1,7 @@
+"""Assigned architecture configs (exact published dims) + registry."""
+from repro.configs.base import (SHAPES, SHAPES_BY_NAME, ArchConfig,
+                                ShapeConfig)
+from repro.configs.registry import ARCHS, get_arch, reduced_config
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "SHAPES_BY_NAME", "ARCHS",
+           "get_arch", "reduced_config"]

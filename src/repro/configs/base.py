@@ -1,0 +1,138 @@
+"""Architecture configuration schema shared by all assigned configs.
+
+Every assigned architecture is a single :class:`ArchConfig`; the model zoo in
+``repro.models`` interprets it.  Published dimensions are entered verbatim;
+the only systematic deviation is vocab padding to a multiple of 256 for TP
+sharding (standard practice; padded logits are masked).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: Optional[int] = None     # default: d_model // n_heads
+    mlp_type: str = "swiglu"           # swiglu | geglu | sq_relu | gelu
+    qkv_bias: bool = False
+    norm_eps: float = 1e-5
+    rope_theta: float = 1e4
+    use_rope: bool = True              # False: sinusoidal absolute positions
+    norm_type: str = "rmsnorm"         # rmsnorm | layernorm
+    tie_embeddings: bool = False
+    # -- MoE ----------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_group_size: int = 256          # dispatch group (capacity granularity)
+    capacity_factor: float = 1.25
+    # -- SSM ----------------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_heads: int = 0                 # mamba2 (SSD) heads; 0 -> mamba1
+    # -- hybrid (zamba2): one shared attention block every `attn_every` ------
+    attn_every: int = 0
+    # -- enc-dec (whisper) ---------------------------------------------------
+    encoder_layers: int = 0
+    # -- modality frontend stub ----------------------------------------------
+    frontend: str = "none"             # none | patch | audio
+    # -- distribution hints ---------------------------------------------------
+    fsdp: bool = False                 # ZeRO-3 shard params over the data axis
+    remat: str = "none"                # none | block (remat each layer block)
+    opt_state_dtype: str = "float32"   # float32 | bfloat16 | int8 (compression)
+    train_microbatches: int = 1        # grad-accumulation slices per step
+    grad_accum_dtype: str = "float32"  # float32 | bfloat16 (accumulator width)
+    # shapes this arch supports; long_* requires sub-quadratic mixing
+    supports_long: bool = False
+
+    # -------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs accounting)."""
+        d, f, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        attn = self.n_heads * hd * d + 2 * self.n_kv_heads * hd * d \
+            + self.n_heads * hd * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        if self.mlp_type in ("swiglu", "geglu"):
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        per_layer = 0
+        n_attn_layers = self.n_layers
+        if self.family == "ssm":
+            n_attn_layers = 0
+        ssm = 0
+        if self.ssm_state:
+            di = self.d_inner
+            ssm = (2 * d * di            # in_proj (x, z)
+                   + di * self.ssm_conv  # conv
+                   + di * self.ssm_state * 2   # A (d_inner x N) + dt bias etc approx
+                   + di * (self.ssm_state * 2 + 2)  # B,C,dt projections approx
+                   + di * d)             # out_proj
+        if self.family == "ssm":
+            per_layer = ssm
+        elif self.family == "hybrid":
+            per_layer = ssm  # + one shared attn block accounted below
+        elif self.n_experts:
+            per_layer = attn + self.n_experts * mlp + d * self.n_experts
+        else:
+            per_layer = attn + mlp
+        total = self.n_layers * per_layer
+        if self.family == "hybrid":
+            total += attn + mlp          # the single shared block
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp)
+            total += self.n_layers * attn  # decoder cross-attention
+        total += self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        mlp = 3 * d * f if self.mlp_type in ("swiglu", "geglu") else 2 * d * f
+        inactive = self.n_layers * (self.n_experts - self.top_k) * mlp
+        return self.param_count() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str                    # train | prefill | decode
+    seq_len: int
+    global_batch: int
+    microbatch: Optional[int] = None   # per-step accumulation slice (train)
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", "train", 4096, 256),
+    ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    ShapeConfig("decode_32k", "decode", 32768, 128),
+    ShapeConfig("long_500k", "decode", 524288, 1),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

@@ -1,0 +1,21 @@
+"""falcon-mamba-7b [ssm] — pure Mamba-1, attention-free.
+
+[arXiv:2410.05355; unverified]
+64L d_model=4096 (attn-free) vocab=65024, ssm_state=16.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,            # d_inner = 8192
+    fsdp=True,
+    remat="block",
+    train_microbatches=8,
+    supports_long=True,
+)

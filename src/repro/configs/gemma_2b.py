@@ -1,0 +1,21 @@
+"""gemma-2b [dense] — GeGLU, head_dim=256, MQA.
+
+[arXiv:2403.08295; hf]
+18L d_model=2048 8H (kv=1) d_ff=16384 vocab=256000.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,               # 8 % 16 != 0 -> sequence-parallel attention
+    n_kv_heads=1,            # MQA
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    mlp_type="geglu",
+    tie_embeddings=True,
+    remat="block",
+)

@@ -1,0 +1,28 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts top-1.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,              # 40 % 16 != 0 -> sequence-parallel attention
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_type="swiglu",
+    rope_theta=5e5,
+    n_experts=128,
+    top_k=1,
+    moe_group_size=512,      # top-1: larger groups keep capacity >= 4
+    fsdp=True,
+    grad_accum_dtype="bfloat16",   # f32 accumulator would not fit 16 GB HBM
+    remat="block",
+    train_microbatches=8,
+    opt_state_dtype="int8",       # 775B total params: int8 m/v fits 16 GB/chip
+)

@@ -1,0 +1,23 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP.
+
+[arXiv:2402.16819; unverified]
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp_type="sq_relu",
+    fsdp=True,
+    grad_accum_dtype="bfloat16",   # f32 accumulator would not fit 16 GB HBM
+    remat="block",
+    train_microbatches=4,
+    opt_state_dtype="bfloat16",   # 340B: fp32 m+v would not fit 16 GB HBM
+)

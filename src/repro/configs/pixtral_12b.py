@@ -1,0 +1,24 @@
+"""pixtral-12b [vlm] — Pixtral-ViT frontend (stub) + Mistral-Nemo backbone.
+
+[hf:mistralai/Pixtral-12B-2409; unverified]
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,            # Mistral-Nemo style fixed head_dim
+    d_ff=14336,
+    vocab_size=131072,
+    mlp_type="swiglu",
+    rope_theta=1e6,
+    frontend="patch",        # STUB: input_specs provides patch embeddings
+    fsdp=True,
+    remat="block",
+    train_microbatches=8,
+)

@@ -1,0 +1,24 @@
+"""qwen1.5-110b [dense] — GQA with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B; hf]
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    mlp_type="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+    fsdp=True,
+    remat="block",
+    train_microbatches=8,
+    opt_state_dtype="bfloat16",
+)

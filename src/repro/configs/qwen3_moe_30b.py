@@ -1,0 +1,26 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts, top-8.
+
+[hf:Qwen/Qwen3-30B-A3B; hf]
+48L d_model=2048 32H (GQA kv=4) d_ff=768 vocab=151936, MoE 128e top-8.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=768,                # per-expert FF width
+    vocab_size=151936,
+    mlp_type="swiglu",
+    rope_theta=1e6,
+    n_experts=128,
+    top_k=8,
+    moe_group_size=256,
+    fsdp=True,
+    remat="block",
+    train_microbatches=2,
+)

@@ -1,0 +1,57 @@
+"""Registry of assigned architectures + reduced-config factory for smoke tests."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (falcon_mamba_7b, gemma_2b, llama4_maverick_400b,
+                           nemotron4_340b, pixtral_12b, qwen1p5_110b,
+                           qwen3_moe_30b, whisper_medium, yi_34b, zamba2_1p2b)
+from repro.configs.base import ArchConfig
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c for c in [
+        pixtral_12b.CONFIG,
+        llama4_maverick_400b.CONFIG,
+        qwen3_moe_30b.CONFIG,
+        whisper_medium.CONFIG,
+        zamba2_1p2b.CONFIG,
+        qwen1p5_110b.CONFIG,
+        yi_34b.CONFIG,
+        nemotron4_340b.CONFIG,
+        gemma_2b.CONFIG,
+        falcon_mamba_7b.CONFIG,
+    ]
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def reduced_config(cfg: ArchConfig, *, n_layers: int = 2, d_model: int = 64,
+                   vocab: int = 512) -> ArchConfig:
+    """Same-family tiny config for CPU smoke tests (shapes asserted, no NaNs)."""
+    heads = max(2, min(cfg.n_heads, 4))
+    kv = 1 if cfg.n_kv_heads == 1 else max(1, min(cfg.n_kv_heads, 2))
+    updates = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=heads if cfg.n_heads else 0,
+        n_kv_heads=kv if cfg.n_kv_heads else 0,
+        head_dim=(d_model // heads) if cfg.n_heads else None,
+        d_ff=d_model * 2 if cfg.d_ff else 0,
+        vocab_size=vocab,
+        fsdp=False,
+        remat="none",
+    )
+    if cfg.n_experts:
+        updates.update(n_experts=4, top_k=min(cfg.top_k, 2), moe_group_size=32)
+    if cfg.ssm_state:
+        updates.update(ssm_state=8)
+    if cfg.encoder_layers:
+        updates.update(encoder_layers=n_layers)
+    if cfg.attn_every:
+        updates.update(attn_every=2)
+    return dataclasses.replace(cfg, **updates)

@@ -1,0 +1,26 @@
+"""whisper-medium [audio] — encoder-decoder, conv frontend (stub).
+
+[arXiv:2212.04356; unverified]
+24L (enc) + 24L (dec) d_model=1024 16H (kv=16) d_ff=4096 vocab=51865.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,             # decoder layers
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,           # full MHA
+    d_ff=4096,
+    vocab_size=51865,        # padded to 51968 for TP sharding
+    mlp_type="gelu",
+    qkv_bias=True,
+    use_rope=False,          # absolute sinusoidal positions
+    norm_type="layernorm",
+    tie_embeddings=True,
+    frontend="audio",        # STUB: input_specs provides frame embeddings
+    remat="block",
+    train_microbatches=2,
+)

@@ -1,0 +1,22 @@
+"""yi-34b [dense] — llama-arch GQA.
+
+[arXiv:2403.04652; hf]
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,              # 56 % 16 != 0 -> sequence-parallel attention
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    mlp_type="swiglu",
+    rope_theta=5e6,
+    fsdp=True,
+    remat="block",
+    train_microbatches=8,
+)

@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — Mamba-2 backbone + one shared attention block.
+
+[arXiv:2411.15242; hf]
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,             # mamba2 layers
+    d_model=2048,
+    n_heads=32,              # shared attention block (MHA, head_dim 64)
+    n_kv_heads=32,
+    d_ff=8192,               # shared block MLP
+    vocab_size=32000,
+    mlp_type="gelu",
+    ssm_state=64,
+    ssm_conv=4,
+    ssm_expand=2,            # d_inner=4096, 64 SSD heads (head_dim=64)
+    attn_every=6,            # shared block applied every 6 mamba layers
+    tie_embeddings=True,
+    remat="block",
+    train_microbatches=8,
+    supports_long=True,      # sub-quadratic: SSM + periodic bounded attention
+)

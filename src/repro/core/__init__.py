@@ -1,0 +1,11 @@
+"""Block-STM core: the paper's contribution as a composable JAX module.
+
+Scheduler + MVMemory + VM (paper Algorithms 1-5) re-derived for SIMD hardware
+as a bulk-synchronous wave engine — see DESIGN.md §2 for the mapping.
+"""
+from repro.core.engine import make_executor, run_block, run_chain
+from repro.core.types import BlockResult, EngineConfig
+from repro.core.vm import run_sequential
+
+__all__ = ["make_executor", "run_block", "run_chain", "BlockResult",
+           "EngineConfig", "run_sequential"]

@@ -1,0 +1,298 @@
+"""Block-STM wave engine.
+
+Executes a block of transactions speculatively and in parallel, producing the
+state of a sequential execution in the preset order (paper §2-3), as a single
+jittable JAX program:
+
+    wave := select lowest-index pending txns (window = #virtual threads)
+          -> vmap-execute them against the multi-version memory snapshot
+          -> apply write sets / register dependencies (ESTIMATE hits)
+          -> rebuild the sorted multi-version index
+          -> validate every executed txn's read set against the new index
+          -> abort failures (write sets become ESTIMATEs)
+          -> advance the commit frontier (longest executed&valid prefix)
+
+The loop is a ``lax.while_loop`` over :class:`EngineState`; determinism is
+structural (no atomics, no races) and equivalence to the sequential execution
+is property-tested in ``tests/test_engine_equivalence.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mvindex
+from repro.core.types import (NO_LOC, STORAGE, BlockResult, EngineConfig,
+                              EngineState, ExecResult)
+from repro.core.vm import SpecCtx, TxnProgram
+
+
+def _init_state(cfg: EngineConfig) -> EngineState:
+    n, w, r = cfg.n_txns, cfg.max_writes, cfg.max_reads
+    empty_index = mvindex.build_index(jnp.full((n, w), NO_LOC, jnp.int32), n)
+    return EngineState(
+        write_locs=jnp.full((n, w), NO_LOC, jnp.int32),
+        write_vals=jnp.zeros((n, w), cfg.value_dtype),
+        estimate=jnp.zeros((n,), jnp.bool_),
+        read_locs=jnp.full((n, r), NO_LOC, jnp.int32),
+        read_writer=jnp.full((n, r), STORAGE, jnp.int32),
+        read_inc=jnp.full((n, r), -1, jnp.int32),
+        incarnation=jnp.zeros((n,), jnp.int32),
+        executed=jnp.zeros((n,), jnp.bool_),
+        needs_exec=jnp.ones((n,), jnp.bool_),
+        blocked_by=jnp.full((n,), -1, jnp.int32),
+        frontier=jnp.asarray(0, jnp.int32),
+        wave=jnp.asarray(0, jnp.int32),
+        idx_keys=empty_index.keys, idx_txn=empty_index.txn,
+        idx_slot=empty_index.slot,
+        stat_execs=jnp.asarray(0, jnp.int32),
+        stat_dep_aborts=jnp.asarray(0, jnp.int32),
+        stat_val_aborts=jnp.asarray(0, jnp.int32),
+        stat_wrote_new=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _select_wave(state: EngineState, cfg: EngineConfig) -> tuple[jax.Array, jax.Array]:
+    """Pick the ``window`` lowest-index eligible transactions.
+
+    This is the BSP analogue of the paper's ``execution_idx`` counter: threads
+    always claim the lowest READY_TO_EXECUTE transaction.  A txn blocked on a
+    dependency is ineligible until its blocker has re-executed (paper:
+    ``resume_dependencies``).
+    """
+    n = cfg.n_txns
+    safe_blocker = jnp.clip(state.blocked_by, 0, n - 1)
+    dep_resolved = (state.blocked_by < 0) | state.executed[safe_blocker]
+    eligible = state.needs_exec & dep_resolved
+    # First `window` eligible indices: nonzero(size=) is O(n) (cumsum+scatter)
+    # vs the O(n log n) argsort it replaces (§Perf iteration 3).  Fill lanes
+    # stay OUT-OF-BOUNDS (= n): XLA clips them on gather (garbage lanes are
+    # masked) and drops them on scatter — keeping in-bounds indices unique.
+    (active_ids,) = jnp.nonzero(eligible, size=cfg.window, fill_value=n)
+    active_mask = active_ids < n
+    return active_ids.astype(jnp.int32), active_mask
+
+
+def _make_resolver(state: EngineState, cfg: EngineConfig):
+    """Read-resolution closure for the current MV state (backend-selected)."""
+    if cfg.backend == "dense":
+        table = mvindex.dense_last_writer(state.write_locs, cfg.n_locs,
+                                          use_pallas=cfg.use_pallas)
+
+        def resolver(loc, reader):
+            return mvindex.dense_resolve(table, state.write_locs,
+                                         state.estimate, state.incarnation,
+                                         loc, reader)
+    else:
+        index = mvindex.MVIndex(state.idx_keys, state.idx_txn, state.idx_slot,
+                                cfg.n_txns)
+
+        def resolver(loc, reader):
+            return mvindex.resolve(index, state.estimate, state.incarnation,
+                                   loc, reader)
+    return resolver
+
+
+def _execute_wave(state: EngineState, active_ids: jax.Array,
+                  program: TxnProgram, params: Any, storage: jax.Array,
+                  cfg: EngineConfig) -> ExecResult:
+    """vmap the VM over the wave; reads resolve against the wave-start index."""
+    resolver = _make_resolver(state, cfg)
+
+    def value_reader(res, loc):
+        return mvindex.resolve_value(state.write_vals, storage, res, loc)
+
+    def exec_one(txn_idx, p):
+        ctx = SpecCtx(cfg, txn_idx, resolver, value_reader)
+        program(p, ctx)
+        return ctx.result()
+
+    p_active = jax.tree_util.tree_map(lambda a: a[active_ids], params)
+    return jax.vmap(exec_one)(active_ids, p_active)
+
+
+def _apply_results(state: EngineState, active_ids: jax.Array,
+                   active_mask: jax.Array, res: ExecResult,
+                   cfg: EngineConfig) -> EngineState:
+    """Record finished incarnations (paper: MVMemory.record + finish_execution)
+    and register dependencies for ESTIMATE-blocked executions
+    (paper: add_dependency)."""
+    success = active_mask & ~res.blocked
+    blocked = active_mask & res.blocked
+
+    old_wlocs = state.write_locs[active_ids]
+    # wrote_new_location (paper L35): any live new loc absent from the old set.
+    new_live = res.write_locs != NO_LOC
+    in_old = (res.write_locs[:, :, None] == old_wlocs[:, None, :]).any(-1)
+    wrote_new = (new_live & ~in_old).any(-1)
+
+    sel = lambda m, a, b: jnp.where(m[:, None] if a.ndim == 2 else m, a, b)
+    upd = lambda arr, new: arr.at[active_ids].set(
+        sel(success, new, arr[active_ids]))
+
+    state = state._replace(
+        write_locs=upd(state.write_locs, res.write_locs),
+        write_vals=upd(state.write_vals, res.write_vals),
+        read_locs=upd(state.read_locs, res.read_locs),
+        read_writer=upd(state.read_writer, res.read_writer),
+        read_inc=upd(state.read_inc, res.read_inc),
+        estimate=state.estimate.at[active_ids].set(
+            jnp.where(success, False, state.estimate[active_ids])),
+        incarnation=state.incarnation.at[active_ids].add(
+            success.astype(jnp.int32)),
+        executed=state.executed.at[active_ids].set(
+            jnp.where(success, True, state.executed[active_ids])),
+        needs_exec=state.needs_exec.at[active_ids].set(
+            jnp.where(success, False, state.needs_exec[active_ids])),
+        blocked_by=state.blocked_by.at[active_ids].set(
+            jnp.where(blocked, res.blocker,
+                      jnp.where(success, -1, state.blocked_by[active_ids]))),
+        stat_execs=state.stat_execs + success.sum(dtype=jnp.int32),
+        stat_dep_aborts=state.stat_dep_aborts + blocked.sum(dtype=jnp.int32),
+        stat_wrote_new=state.stat_wrote_new
+        + (success & wrote_new).sum(dtype=jnp.int32),
+    )
+    return state
+
+
+def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
+                    read_writer, read_inc, readers) -> jax.Array:
+    """validate_read_set (paper L62-72), vectorized over rows."""
+    resolver = _make_resolver(state, cfg)
+    res = jax.vmap(jax.vmap(resolver))(read_locs, readers)
+    empty = read_locs == NO_LOC
+    was_storage = read_writer == STORAGE
+    ok_storage = was_storage & ~res.found                       # L68
+    ok_mv = (~was_storage) & res.found & ~res.is_estimate \
+        & (res.writer == read_writer) & (res.inc == read_inc)   # L70
+    read_ok = empty | jnp.where(was_storage, ok_storage, ok_mv)
+    read_ok = read_ok & ~(res.is_estimate & ~empty)              # L67
+    return read_ok.all(axis=-1)
+
+
+def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
+    """Validate executed txns against the fresh index (paper:
+    validate_read_set + finish_validation).
+
+    With ``validation_window == 0`` every executed txn is re-validated each
+    wave (conservative BSP).  With ``vw > 0`` only the txns in
+    [frontier, frontier + vw) are validated — the BSP analogue of the paper's
+    ``validation_idx`` sweep: validation effort concentrates just above the
+    commit frontier and moves up with it.  Safety is unchanged because the
+    frontier only ever advances across txns validated in the current wave.
+    """
+    n, r = cfg.n_txns, cfg.max_reads
+    vw = cfg.validation_window
+    if vw <= 0 or vw >= n:
+        readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                                   (n, r))
+        valid = _read_set_valid(state, cfg, state.read_locs,
+                                state.read_writer, state.read_inc, readers)
+        fail = state.executed & ~valid
+        ok_for_commit = state.executed & ~fail
+    else:
+        start = jnp.minimum(state.frontier, n - vw)
+        rows = start + jnp.arange(vw, dtype=jnp.int32)
+        readers = jnp.broadcast_to(rows[:, None], (vw, r))
+        valid_w = _read_set_valid(
+            state, cfg,
+            jax.lax.dynamic_slice_in_dim(state.read_locs, start, vw),
+            jax.lax.dynamic_slice_in_dim(state.read_writer, start, vw),
+            jax.lax.dynamic_slice_in_dim(state.read_inc, start, vw),
+            readers)
+        fail = jnp.zeros((n,), jnp.bool_).at[rows].set(~valid_w)
+        fail = fail & state.executed
+        # only txns validated THIS wave (or already committed) may commit
+        in_window = jnp.zeros((n,), jnp.bool_).at[rows].set(True)
+        below = jnp.arange(n, dtype=jnp.int32) < state.frontier
+        ok_for_commit = state.executed & ~fail & (in_window | below)
+
+    state = state._replace(
+        estimate=state.estimate | fail,
+        executed=state.executed & ~fail,
+        needs_exec=state.needs_exec | fail,
+        stat_val_aborts=state.stat_val_aborts + fail.sum(dtype=jnp.int32),
+    )
+    # Commit frontier: longest validated-executed prefix (monotone).
+    prefix = jnp.cumprod(ok_for_commit.astype(jnp.int32))
+    frontier = jnp.maximum(state.frontier, prefix.sum().astype(jnp.int32))
+    return state._replace(frontier=frontier)
+
+
+def _wave_step(state: EngineState, program: TxnProgram, params: Any,
+               storage: jax.Array, cfg: EngineConfig) -> EngineState:
+    active_ids, active_mask = _select_wave(state, cfg)
+    res = _execute_wave(state, active_ids, program, params, storage, cfg)
+    state = _apply_results(state, active_ids, active_mask, res, cfg)
+    if cfg.backend != "dense":   # dense resolvers rebuild from write_locs lazily
+        index = mvindex.build_index(state.write_locs, cfg.n_txns)
+        state = state._replace(idx_keys=index.keys, idx_txn=index.txn,
+                               idx_slot=index.slot)
+    state = _validate_all(state, cfg)
+    return state._replace(wave=state.wave + 1)
+
+
+def _snapshot(state: EngineState, storage: jax.Array,
+              cfg: EngineConfig) -> jax.Array:
+    """MVMemory.snapshot (paper L55-61): highest writer per location, else
+    pre-block storage."""
+    resolver = _make_resolver(state, cfg)
+    locs = jnp.arange(cfg.n_locs, dtype=jnp.int32)
+    reader = jnp.asarray(cfg.n_txns, jnp.int32)
+
+    def read_final(loc):
+        res = resolver(loc, reader)
+        return mvindex.resolve_value(state.write_vals, storage, res, loc)
+
+    return jax.vmap(read_final)(locs)
+
+
+def run_block(program: TxnProgram, params: Any, storage: jax.Array,
+              cfg: EngineConfig) -> BlockResult:
+    """Execute one block under Block-STM semantics. Jit-compatible."""
+    state = _init_state(cfg)
+    cap = jnp.asarray(cfg.waves_cap(), jnp.int32)
+
+    def cond(s: EngineState):
+        return (s.frontier < cfg.n_txns) & (s.wave < cap)
+
+    def body(s: EngineState):
+        return _wave_step(s, program, params, storage, cfg)
+
+    state = jax.lax.while_loop(cond, body, state)
+    return BlockResult(
+        snapshot=_snapshot(state, storage, cfg),
+        committed=state.frontier >= cfg.n_txns,
+        waves=state.wave,
+        execs=state.stat_execs,
+        dep_aborts=state.stat_dep_aborts,
+        val_aborts=state.stat_val_aborts,
+        wrote_new=state.stat_wrote_new,
+    )
+
+
+def make_executor(program: TxnProgram, cfg: EngineConfig) -> Callable:
+    """Jitted block executor: (params, storage) -> BlockResult."""
+    @functools.partial(jax.jit, donate_argnums=())
+    def run(params, storage):
+        return run_block(program, params, storage, cfg)
+    return run
+
+
+def run_chain(program: TxnProgram, blocks_params: Any, storage: jax.Array,
+              cfg: EngineConfig) -> tuple[jax.Array, BlockResult]:
+    """Execute a CHAIN of blocks: each block's committed snapshot becomes the
+    next block's storage (the blockchain validator loop; paper §1 "state is
+    updated per block").  ``blocks_params`` leaves have a leading block axis.
+    Jit-compatible: one compiled program executes the whole chain via scan.
+    """
+    def step(st, params):
+        res = run_block(program, params, st, cfg)
+        return res.snapshot, res._replace(snapshot=jnp.zeros((0,),
+                                                             cfg.value_dtype))
+
+    final_state, results = jax.lax.scan(step, storage, blocks_params)
+    return final_state, results

@@ -1,0 +1,108 @@
+"""Core types for the Block-STM wave engine.
+
+The engine state mirrors the paper's modules:
+  * MVMemory   -> per-transaction write-slot arrays + per-txn ESTIMATE flag
+                  (paper Algorithm 2: ``data``, ``last_written_locations``,
+                  ``last_read_set``).
+  * Scheduler  -> ``needs_exec`` / ``executed`` / ``blocked_by`` masks +
+                  ``incarnation`` counters + the commit ``frontier``
+                  (paper Algorithm 4/5 status array; the two atomic counters
+                  become the wave window / the full-vector validation pass).
+
+Everything is a flat JAX array so the whole engine state threads through a
+single ``lax.while_loop`` carry and can be donated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NO_LOC = -1            # unused read/write slot
+STORAGE = -1           # read resolved from pre-block storage (paper: version ⊥)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of a block execution."""
+
+    n_txns: int                  # BLOCK.size()
+    n_locs: int                  # size of the location universe for this block
+    max_reads: int               # R: read-slot bound per incarnation
+    max_writes: int              # W: write-slot bound per incarnation
+    window: int = 32             # #virtual threads (lowest-index-first width)
+    validation_window: int = 0   # 0 = validate all executed txns per wave;
+                                 # >0 = only [frontier, frontier+vw) — the
+                                 # paper's validation_idx sweep (perf: O(vw)
+                                 # instead of O(n) validation per wave)
+    max_waves: int = 0           # 0 -> auto (2*n + 8)
+    value_dtype: jnp.dtype = jnp.int32
+    backend: str = "sorted"      # 'sorted' | 'dense' (dense uses the Pallas kernel path)
+    use_pallas: bool = False     # dense backend: pallas mv_resolve (interpret on CPU)
+    track_write_stability: bool = True  # paper's wrote_new_location statistic
+
+    def __post_init__(self):
+        # sorted-index keys are loc*(n+1)+writer in int32 (x64 is disabled).
+        if self.n_locs * (self.n_txns + 1) + self.n_txns >= 2**31:
+            raise ValueError(
+                f"n_locs*(n_txns+1) overflows int32 index keys "
+                f"({self.n_locs}*{self.n_txns + 1}); shrink the block or "
+                f"location universe, or shard the block.")
+
+    def waves_cap(self) -> int:
+        return self.max_waves if self.max_waves > 0 else 2 * self.n_txns + 8
+
+
+class EngineState(NamedTuple):
+    """Carry of the wave loop. Shapes: n = n_txns, W = max_writes, R = max_reads."""
+
+    # -- MVMemory ----------------------------------------------------------
+    write_locs: jax.Array        # (n, W) i32, NO_LOC = empty slot
+    write_vals: jax.Array        # (n, W) value_dtype
+    estimate: jax.Array          # (n,)  bool: last write-set is ESTIMATE-marked
+    # -- recorded read sets (paper: last_read_set) ---------------------------
+    read_locs: jax.Array         # (n, R) i32, NO_LOC = empty slot
+    read_writer: jax.Array       # (n, R) i32, STORAGE = from storage
+    read_inc: jax.Array          # (n, R) i32 incarnation of writer at read time
+    # -- Scheduler ----------------------------------------------------------
+    incarnation: jax.Array       # (n,) i32: number of finished executions
+    executed: jax.Array          # (n,) bool: has a live (non-aborted) result
+    needs_exec: jax.Array        # (n,) bool: scheduled for (re-)execution
+    blocked_by: jax.Array        # (n,) i32: txn idx whose ESTIMATE blocked us, or -1
+    frontier: jax.Array          # () i32: txns < frontier are committed
+    wave: jax.Array              # () i32
+    # -- sorted multi-version index (rebuilt each wave) ----------------------
+    idx_keys: jax.Array          # (n*W,) i64 sorted keys loc*(n+1)+writer, dead=MAX
+    idx_txn: jax.Array           # (n*W,) i32 writer txn of the sorted entry
+    idx_slot: jax.Array          # (n*W,) i32 write slot of the sorted entry
+    # -- statistics ----------------------------------------------------------
+    stat_execs: jax.Array        # () i32 total incarnations executed
+    stat_dep_aborts: jax.Array   # () i32 executions aborted on an ESTIMATE read
+    stat_val_aborts: jax.Array   # () i32 validation failures that aborted
+    stat_wrote_new: jax.Array    # () i32 incarnations that wrote a new location
+
+
+class ExecResult(NamedTuple):
+    """Output of one VM incarnation (vmapped across the wave)."""
+
+    read_locs: jax.Array         # (R,) i32
+    read_writer: jax.Array       # (R,) i32
+    read_inc: jax.Array          # (R,) i32
+    write_locs: jax.Array        # (W,) i32
+    write_vals: jax.Array        # (W,) value_dtype
+    blocked: jax.Array           # () bool: hit a lower-txn ESTIMATE (READ_ERROR)
+    blocker: jax.Array           # () i32: blocking txn idx
+
+
+class BlockResult(NamedTuple):
+    """Result of executing one block."""
+
+    snapshot: jax.Array          # (n_locs,) final state (MVMemory.snapshot over storage)
+    committed: jax.Array         # () bool: frontier == n (False => wave cap hit)
+    waves: jax.Array             # () i32
+    execs: jax.Array             # () i32 total incarnations
+    dep_aborts: jax.Array       # () i32
+    val_aborts: jax.Array       # () i32
+    wrote_new: jax.Array        # () i32

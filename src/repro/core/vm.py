@@ -1,0 +1,178 @@
+"""Transaction VM (paper Algorithm 3).
+
+A *transaction program* is a Python function
+
+    def txn(params, ctx) -> None
+
+that performs a bounded number of ``ctx.read(loc)`` / ``ctx.write(loc, value,
+enabled=...)`` calls.  Read addresses may depend on previously read values
+(dynamic read sets); writes may be conditionally enabled (dynamic write sets) —
+the two properties that distinguish Block-STM's setting from Bohm/Calvin, which
+assume write sets are known up front.
+
+The same program runs in three harnesses:
+
+* ``SpecCtx``     — speculative JAX execution inside the wave engine (vmapped).
+                    Reads resolve against MVMemory; ESTIMATE hits set the
+                    ``blocked`` flag (paper: READ_ERROR -> add_dependency).
+* ``OracleCtx``   — plain-Python sequential execution (the reference the paper
+                    itself validates against).
+* shape probing   — ``count_slots`` traces the program once to check R/W bounds.
+
+Because the *number of textual read()/write() call sites is static*, slot
+indices are Python ints: the recorded read/write sets are fixed-shape arrays
+with NO_LOC padding, which is what makes the whole engine vmappable.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mvindex
+from repro.core.types import NO_LOC, STORAGE, EngineConfig, ExecResult
+
+TxnProgram = Callable[..., None]  # (params, ctx) -> None
+
+
+class SpecCtx:
+    """Speculative execution context: reads via MVMemory, writes buffered.
+
+    Mirrors Algorithm 3: reads check the own write-set first (L84), then
+    MVMemory (L87), then storage (L90); every MV/storage read is recorded with
+    its version for later validation.  An ESTIMATE resolution marks the
+    execution blocked (L95-96) — the engine discards buffered effects and
+    registers the dependency.
+    """
+
+    def __init__(self, cfg: EngineConfig, txn_idx: jax.Array, resolver,
+                 value_reader):
+        self.cfg = cfg
+        self.txn_idx = txn_idx
+        self._resolver = resolver          # (loc, reader) -> ReadResolution
+        self._value_reader = value_reader  # (resolution, loc) -> value
+        self.read_locs = jnp.full((cfg.max_reads,), NO_LOC, jnp.int32)
+        self.read_writer = jnp.full((cfg.max_reads,), STORAGE, jnp.int32)
+        self.read_inc = jnp.full((cfg.max_reads,), -1, jnp.int32)
+        self.write_locs = jnp.full((cfg.max_writes,), NO_LOC, jnp.int32)
+        self.write_vals = jnp.zeros((cfg.max_writes,), cfg.value_dtype)
+        self.blocked = jnp.asarray(False)
+        self.blocker = jnp.asarray(-1, jnp.int32)
+        self._r = 0  # static slot counters
+        self._w = 0
+
+    # -- paper L83-96 --------------------------------------------------------
+    def read(self, loc, *, enabled=True) -> jax.Array:
+        if self._r >= self.cfg.max_reads:
+            raise ValueError(f"transaction exceeds max_reads={self.cfg.max_reads}")
+        loc = jnp.asarray(loc, jnp.int32)
+        enabled = jnp.asarray(enabled) & ~self.blocked
+        eff_loc = jnp.where(enabled, loc, NO_LOC)
+        # read-own-write (L84): newest matching buffered write wins.
+        own_hit = jnp.asarray(False)
+        own_val = jnp.zeros((), self.cfg.value_dtype)
+        for s in range(self._w):
+            m = self.write_locs[s] == eff_loc
+            own_hit = own_hit | m
+            own_val = jnp.where(m, self.write_vals[s], own_val)
+        res = self._resolver(eff_loc, self.txn_idx)
+        mv_val = self._value_reader(res, eff_loc)
+        value = jnp.where(own_hit, own_val, mv_val)
+        # record (skip own-write hits: they are not MV reads, exactly as L84).
+        rec = enabled & ~own_hit
+        self.read_locs = self.read_locs.at[self._r].set(jnp.where(rec, eff_loc, NO_LOC))
+        self.read_writer = self.read_writer.at[self._r].set(
+            jnp.where(rec & res.found, res.writer, STORAGE))
+        self.read_inc = self.read_inc.at[self._r].set(
+            jnp.where(rec & res.found, res.inc, -1))
+        self._r += 1
+        # ESTIMATE -> READ_ERROR (L95): first blocker wins.
+        hit_est = rec & res.is_estimate & ~self.blocked
+        self.blocker = jnp.where(hit_est, res.writer, self.blocker)
+        self.blocked = self.blocked | hit_est
+        return value
+
+    # -- paper L77-81 --------------------------------------------------------
+    def write(self, loc, value, *, enabled=True) -> None:
+        if self._w >= self.cfg.max_writes:
+            raise ValueError(f"transaction exceeds max_writes={self.cfg.max_writes}")
+        loc = jnp.asarray(loc, jnp.int32)
+        enabled = jnp.asarray(enabled) & ~self.blocked
+        value = jnp.asarray(value, self.cfg.value_dtype)
+        # latest-value-per-location (L78-80): disable earlier slots on same loc.
+        for s in range(self._w):
+            dup = enabled & (self.write_locs[s] == loc)
+            self.write_locs = self.write_locs.at[s].set(
+                jnp.where(dup, NO_LOC, self.write_locs[s]))
+        self.write_locs = self.write_locs.at[self._w].set(
+            jnp.where(enabled, loc, NO_LOC))
+        self.write_vals = self.write_vals.at[self._w].set(
+            jnp.where(enabled, value, 0))
+        self._w += 1
+
+    def result(self) -> ExecResult:
+        return ExecResult(
+            read_locs=self.read_locs, read_writer=self.read_writer,
+            read_inc=self.read_inc, write_locs=self.write_locs,
+            write_vals=self.write_vals, blocked=self.blocked, blocker=self.blocker)
+
+
+class OracleCtx:
+    """Sequential reference context over a dict (the paper's correctness oracle)."""
+
+    def __init__(self, state: dict, storage):
+        self._state = state
+        self._storage = storage
+        self._buffer: dict = {}
+
+    def read(self, loc, *, enabled=True):
+        import numpy as np
+        loc = int(np.asarray(loc)); enabled = bool(np.asarray(enabled))
+        if not enabled:
+            return np.int64(0)
+        if loc in self._buffer:
+            return self._buffer[loc]
+        if loc in self._state:
+            return self._state[loc]
+        return self._storage[loc]
+
+    def write(self, loc, value, *, enabled=True):
+        import numpy as np
+        loc = int(np.asarray(loc)); enabled = bool(np.asarray(enabled))
+        if enabled:
+            self._buffer[loc] = np.asarray(value)
+
+    def commit(self):
+        self._state.update(self._buffer)
+        self._buffer = {}
+
+
+def unstack_params(params, n_txns: int):
+    """dict-of-arrays (leading dim n) -> list of per-txn numpy dicts."""
+    import numpy as np
+    leaves = jax.tree_util.tree_map(lambda a: np.asarray(a), params)
+    flat, treedef = jax.tree_util.tree_flatten(leaves)
+    return [jax.tree_util.tree_unflatten(treedef, [f[i] for f in flat])
+            for i in range(n_txns)]
+
+
+def run_sequential(program: TxnProgram, params, storage, n_txns=None):
+    """Execute the block sequentially (tx_1, tx_2, ...): the ground truth.
+
+    Returns the final dense state vector (storage with all committed writes
+    applied), comparable to ``BlockResult.snapshot``.
+    """
+    import numpy as np
+    if not isinstance(params, list):
+        params = unstack_params(params, n_txns)
+    storage = np.asarray(storage)
+    state: dict = {}
+    for p in params:
+        ctx = OracleCtx(state, storage)
+        program(p, ctx)
+        ctx.commit()
+    out = storage.copy()
+    for loc, val in state.items():
+        out[loc] = val
+    return out

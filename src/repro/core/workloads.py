@@ -1,0 +1,203 @@
+"""Benchmark transaction programs (paper §4.1).
+
+* ``p2p``       — the paper's peer-to-peer payment: pick two accounts, move a
+  random amount.  Parameterized read/write profile: Diem p2p ≈ 21 reads /
+  4 writes (balances + sequence numbers + chain-config reads), Aptos p2p ≈
+  8 reads / 5 writes.  Chain-config locations are shared *read-only* state and
+  never conflict; balances + sequence numbers conflict under small account sets.
+* ``indirect``  — a pointer-chasing contract: read an index cell, then
+  read-modify-write the account it points at (dynamic read set: the hot
+  location is only discoverable *during* execution — the case Bohm cannot
+  precompute).
+* ``admission`` — serving-admission transactions used by the serving example:
+  allocate KV-cache pages from a shared free-list head and charge a tenant
+  quota; conditional write set (rejected requests write nothing).
+
+Location universes are laid out as flat int32 ids:
+  account a: balance at 2a, sequence number at 2a+1; chain config occupies the
+  tail of the universe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import EngineConfig
+
+CHAIN_CFG_READS_DIEM = 15   # 21 total reads = 15 cfg + 2 balances + 2 seqnos + 2 frozen-flags
+CHAIN_CFG_READS_APTOS = 4   # 8 total reads  = 4 cfg + 2 balances + 2 seqnos
+
+
+@dataclasses.dataclass(frozen=True)
+class P2PSpec:
+    n_accounts: int
+    cfg_reads: int = CHAIN_CFG_READS_APTOS   # 'aptos' profile by default
+    write_seqno: bool = True                 # Diem/Aptos both bump sender+receiver meta
+
+    @property
+    def n_locs(self) -> int:
+        return 2 * self.n_accounts + self.cfg_reads
+
+    @property
+    def max_reads(self) -> int:
+        return self.cfg_reads + 4
+
+    @property
+    def max_writes(self) -> int:
+        return 4 if self.write_seqno else 2
+
+
+def p2p_program(spec: P2PSpec):
+    """(params, ctx) transaction body; params = dict(src, dst, amount)."""
+    cfg_base = 2 * spec.n_accounts
+
+    def txn(p, ctx):
+        # chain-config verification reads (read-only shared state).
+        for k in range(spec.cfg_reads):
+            ctx.read(cfg_base + k)
+        src_bal = ctx.read(2 * p["src"])
+        dst_bal = ctx.read(2 * p["dst"])
+        ok = src_bal >= p["amount"]            # conditional => dynamic write set
+        ctx.write(2 * p["src"], src_bal - p["amount"], enabled=ok)
+        ctx.write(2 * p["dst"], dst_bal + p["amount"], enabled=ok)
+        if spec.write_seqno:
+            src_seq = ctx.read(2 * p["src"] + 1)
+            dst_seq = ctx.read(2 * p["dst"] + 1)
+            ctx.write(2 * p["src"] + 1, src_seq + 1)
+            ctx.write(2 * p["dst"] + 1, dst_seq + 1, enabled=ok)
+
+    return txn
+
+
+def make_p2p_block(spec: P2PSpec, n_txns: int, seed: int = 0,
+                   init_balance: int = 10**6):
+    """Random p2p block + storage, mirroring the paper's generator."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, spec.n_accounts, n_txns)
+    # dst != src, as in the paper ("two different accounts").
+    dst = (src + rng.integers(1, max(spec.n_accounts, 2), n_txns)) % spec.n_accounts
+    if spec.n_accounts == 1:
+        dst = src
+    amount = rng.integers(1, 100, n_txns)
+    params = {
+        "src": jnp.asarray(src, jnp.int32),
+        "dst": jnp.asarray(dst, jnp.int32),
+        "amount": jnp.asarray(amount, jnp.int32),
+    }
+    storage = np.zeros(spec.n_locs, np.int32)
+    storage[0:2 * spec.n_accounts:2] = init_balance
+    storage[2 * spec.n_accounts:] = rng.integers(1, 1000, spec.cfg_reads)
+    return params, jnp.asarray(storage)
+
+
+def p2p_engine_config(spec: P2PSpec, n_txns: int, window: int = 32,
+                      **kw) -> EngineConfig:
+    return EngineConfig(n_txns=n_txns, n_locs=spec.n_locs,
+                        max_reads=spec.max_reads, max_writes=spec.max_writes,
+                        window=window, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pointer-indirection workload: dynamic read locations.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndirectSpec:
+    n_slots: int          # pointer cells [0, n_slots) -> targets [n_slots, 2*n_slots)
+
+    @property
+    def n_locs(self) -> int:
+        return 2 * self.n_slots
+
+    max_reads: int = 3
+    max_writes: int = 2
+
+
+def indirect_program(spec: IndirectSpec):
+    def txn(p, ctx):
+        target = ctx.read(p["slot"])           # hop 1: discover the target
+        val = ctx.read(target)                 # hop 2: dynamic location
+        ctx.write(target, val + p["delta"])    # RMW on the discovered cell
+        # occasionally repoint the slot -> lower txns change higher txns' read sets
+        ctx.write(p["slot"], p["new_target"], enabled=p["repoint"] != 0)
+    return txn
+
+
+def make_indirect_block(spec: IndirectSpec, n_txns: int, seed: int = 0,
+                        repoint_prob: float = 0.2):
+    rng = np.random.default_rng(seed)
+    params = {
+        "slot": jnp.asarray(rng.integers(0, spec.n_slots, n_txns), jnp.int32),
+        "delta": jnp.asarray(rng.integers(1, 50, n_txns), jnp.int32),
+        "new_target": jnp.asarray(
+            rng.integers(spec.n_slots, 2 * spec.n_slots, n_txns), jnp.int32),
+        "repoint": jnp.asarray(
+            rng.random(n_txns) < repoint_prob, jnp.int32),
+    }
+    storage = np.zeros(spec.n_locs, np.int32)
+    storage[:spec.n_slots] = rng.integers(spec.n_slots, 2 * spec.n_slots,
+                                          spec.n_slots)
+    return params, jnp.asarray(storage)
+
+
+def indirect_engine_config(spec: IndirectSpec, n_txns: int, window: int = 32,
+                           **kw) -> EngineConfig:
+    return EngineConfig(n_txns=n_txns, n_locs=spec.n_locs,
+                        max_reads=spec.max_reads, max_writes=spec.max_writes,
+                        window=window, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Serving-admission workload (used by examples/serve_blockstm.py).
+# Locations: 0 = free-page head pointer; 1..T = per-tenant used-quota;
+# T+1..T+G = per-sequence-group page-count.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec:
+    n_tenants: int
+    n_groups: int
+    total_pages: int
+    quota_per_tenant: int
+
+    @property
+    def n_locs(self) -> int:
+        return 1 + self.n_tenants + self.n_groups
+
+    max_reads: int = 3
+    max_writes: int = 3
+
+
+def admission_program(spec: AdmissionSpec):
+    def txn(p, ctx):
+        head = ctx.read(0)                         # free-list head (hot!)
+        used = ctx.read(1 + p["tenant"])
+        grp = ctx.read(1 + spec.n_tenants + p["group"])
+        fits = (head + p["pages"] <= spec.total_pages) & \
+               (used + p["pages"] <= spec.quota_per_tenant)
+        ctx.write(0, head + p["pages"], enabled=fits)
+        ctx.write(1 + p["tenant"], used + p["pages"], enabled=fits)
+        ctx.write(1 + spec.n_tenants + p["group"], grp + p["pages"],
+                  enabled=fits)
+    return txn
+
+
+def make_admission_block(spec: AdmissionSpec, n_txns: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = {
+        "tenant": jnp.asarray(rng.integers(0, spec.n_tenants, n_txns), jnp.int32),
+        "group": jnp.asarray(rng.integers(0, spec.n_groups, n_txns), jnp.int32),
+        "pages": jnp.asarray(rng.integers(1, 8, n_txns), jnp.int32),
+    }
+    storage = jnp.zeros(spec.n_locs, jnp.int32)
+    return params, storage
+
+
+def admission_engine_config(spec: AdmissionSpec, n_txns: int, window: int = 32,
+                            **kw) -> EngineConfig:
+    return EngineConfig(n_txns=n_txns, n_locs=spec.n_locs,
+                        max_reads=spec.max_reads, max_writes=spec.max_writes,
+                        window=window, **kw)

@@ -1,0 +1,1 @@
+"""Mesh context, sharding helpers, fault-tolerance utilities."""

@@ -1,0 +1,139 @@
+"""Global mesh context + sharding-constraint helpers.
+
+Models are written against *logical* axes:
+
+    BATCH  -> ("pod", "data") when a pod axis exists, else ("data",)
+    MODEL  -> "model"
+
+``constrain`` is a no-op when no mesh is active (CPU smoke tests), so model
+code is identical between the laptop path and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = "__batch__"
+MODEL = "__model__"
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    global _ACTIVE_MESH
+    prev = _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH = prev
+
+
+def is_spec(s) -> bool:
+    """True for spec leaves: plain tuples of axis names / None.
+
+    NamedTuples (e.g. OptState) are containers, not specs.
+    """
+    return (isinstance(s, tuple) and not hasattr(s, "_fields")
+            and all(e is None or isinstance(e, (str, tuple)) for e in s))
+
+
+def tree_shardings(spec_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of spec tuples to NamedShardings."""
+    import jax as _jax
+    return _jax.tree_util.tree_map(
+        lambda s: sharding(s, mesh), spec_tree, is_leaf=is_spec)
+
+
+def tree_shardings_for(spec_tree, struct_tree, mesh: Optional[Mesh] = None):
+    """Shardings sanitized against concrete shapes: axes whose dimension does
+    not divide the mesh-axis size are dropped (e.g. global_batch=1 decode)."""
+    import jax as _jax
+    mesh = mesh or _ACTIVE_MESH
+
+    def one(spec, struct):
+        resolved = tuple(resolve_spec(spec, mesh))
+        safe = []
+        for dim, axis in zip(struct.shape,
+                             resolved + (None,) * len(struct.shape)):
+            size = _axis_size(mesh, axis)
+            safe.append(axis if size == 1 or (size > 1 and dim % size == 0)
+                        else None)
+        return NamedSharding(mesh, P(*safe))
+
+    flat_spec = _jax.tree_util.tree_leaves(spec_tree, is_leaf=is_spec)
+    flat_struct = _jax.tree_util.tree_leaves(struct_tree)
+    treedef = _jax.tree_util.tree_structure(struct_tree)
+    return _jax.tree_util.tree_unflatten(
+        treedef, [one(s, t) for s, t in zip(flat_spec, flat_struct)])
+
+
+def batch_axes(mesh: Optional[Mesh] = None):
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return None
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def resolve_spec(spec, mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names in a spec tuple to concrete mesh axes."""
+    mesh = mesh or _ACTIVE_MESH
+    out = []
+    for s in spec:
+        if s == BATCH:
+            out.append(batch_axes(mesh))
+        elif s == MODEL:
+            out.append("model")
+        else:
+            out.append(s)
+    return P(*out)
+
+
+def sharding(spec, mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _ACTIVE_MESH
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(spec, mesh))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint against the active mesh (no-op without one).
+
+    Axes whose dimension does not divide the mesh-axis size are dropped from
+    the spec (e.g. batch=1 long-context decode stays replicated over data).
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    resolved = resolve_spec(spec, mesh)
+    safe = []
+    for dim, axis in zip(x.shape, tuple(resolved) + (None,) * x.ndim):
+        size = _axis_size(mesh, axis)
+        safe.append(axis if (size > 1 and dim % size == 0) or size == 1
+                    else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*safe)))

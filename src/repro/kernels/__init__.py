@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle):
+
+* mv_resolve      — Block-STM dense multi-version read-resolution table
+* flash_attention — FlashAttention-2 forward w/ GQA + causal (train & decode)
+* selective_scan  — Mamba-1 selective state-space scan
+"""

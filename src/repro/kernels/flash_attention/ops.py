@@ -1,0 +1,24 @@
+"""Jitted public wrapper for flash attention.
+
+Model code calls :func:`attention`, which dispatches to:
+* the Pallas kernel (compiled on TPU, interpret-mode on CPU), or
+* the pure-XLA reference — used for the multi-pod dry-run lowering so the
+  compiled HLO (and its cost analysis) reflects the XLA production path.
+"""
+import jax
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              impl: str = "xla", block_q: int = 128, block_k: int = 128,
+              chunk: int = 1024, expand_kv: bool = True):
+    """impl: 'xla' (query-chunked, production) | 'xla_naive' | 'pallas'."""
+    if impl == "pallas":
+        return kernel.flash_attention(
+            q, k, v, causal=causal, scale=scale, block_q=block_q,
+            block_k=block_k, interpret=jax.default_backend() != "tpu")
+    if impl == "xla_naive":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    return ref.attention_chunked_ref(q, k, v, causal=causal, scale=scale,
+                                     chunk=chunk, expand_kv=expand_kv)

@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for flash attention (GQA + causal, f32 math) +
+the chunked XLA production path.
+
+``attention_ref`` materializes the full (B, H, Sq, Skv) score tensor — exact
+but O(S²) memory; it is the test oracle and fine for short sequences.
+``attention_chunked_ref`` is the XLA path used at 32k+ sequence lengths: a
+``lax.scan`` over query chunks bounds live score memory to
+(B, H, chunk, Skv) while remaining numerically identical (full-row softmax
+per chunk, not online).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Matches kernel semantics."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    group = hq // hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kf)
+    if causal:
+        q_pos = jnp.arange(sq)[:, None] + (skv - sq)
+        k_pos = jnp.arange(skv)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def attention_chunked_ref(q, k, v, *, causal: bool = True,
+                          scale: float | None = None, chunk: int = 1024,
+                          expand_kv: bool = True):
+    """Query-chunked attention; same semantics as attention_ref."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if scale is None:
+        scale = d ** -0.5
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        return attention_ref(q, k, v, causal=causal, scale=scale)
+    group = hq // hkv
+    nq = sq // chunk
+    # GQA: expand KV to the full query-head axis.  A (hkv, group) split of
+    # the head axis is NOT expressible as a sharding when tp does not divide
+    # hkv — the SPMD partitioner replicates the whole score tensor ("
+    # involuntary full rematerialization").  With the repeat, every einsum
+    # keeps the head axis, each model shard materializes only its own
+    # hq/tp KV-head copies, and scores stay head-sharded (§Perf cell-2 fix).
+    qc = (q.astype(jnp.float32) * scale).reshape(b, hq, nq, chunk, d)
+    qc = qc.transpose(2, 0, 1, 3, 4)                    # (nq, B, H, c, D)
+    # expand_kv=False (sequence-parallel attention): heads are replicated
+    # anyway, so the un-expanded grouped einsum path is cheaper there.
+    do_expand = group > 1 and expand_kv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32) if do_expand \
+        else k.astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32) if do_expand \
+        else v.astype(jnp.float32)
+    if not do_expand and group > 1:
+        return _chunked_grouped(q, kf, vf, scale=scale, causal=causal,
+                                chunk=chunk, group=group)
+    k_pos = jnp.arange(skv)
+    offset = skv - sq
+
+    # checkpointed: backward recomputes the (c, Skv) score/softmax tile per
+    # chunk instead of saving O(S^2) softmax weights across all chunks.
+    @jax.checkpoint
+    def chunk_attn(i, qi, kf, vf):
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, kf)
+        if causal:
+            q_pos = i * chunk + jnp.arange(chunk) + offset
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, -jnp.inf)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+
+    def one_chunk(_, args):
+        i, qi = args                                    # qi: (B,H,c,D)
+        return None, chunk_attn(i, qi, kf, vf)
+
+    _, outs = jax.lax.scan(one_chunk, None, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)
+
+
+def _chunked_grouped(q, kf, vf, *, scale, causal, chunk, group):
+    """Un-expanded GQA path for replicated-head (sequence-parallel) attention."""
+    import jax
+    b, hq, sq, d = q.shape
+    hkv, skv = kf.shape[1], kf.shape[2]
+    nq = sq // chunk
+    qc = (q.astype(jnp.float32) * scale).reshape(b, hkv, group, nq, chunk, d)
+    qc = qc.transpose(3, 0, 1, 2, 4, 5)
+    k_pos = jnp.arange(skv)
+    offset = skv - sq
+
+    @jax.checkpoint
+    def chunk_attn(i, qi):
+        s = jnp.einsum("bgmqd,bgkd->bgmqk", qi, kf)
+        if causal:
+            q_pos = i * chunk + jnp.arange(chunk) + offset
+            s = jnp.where(q_pos[:, None] >= k_pos[None, :], s, -jnp.inf)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        return jnp.einsum("bgmqk,bgkd->bgmqd", p, vf)
+
+    def one_chunk(_, args):
+        i, qi = args
+        return None, chunk_attn(i, qi)
+
+    _, outs = jax.lax.scan(one_chunk, None, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, sq, d)
+    return out.astype(q.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the mv_resolve kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def mv_resolve_inclusive_ref(marks: jax.Array) -> jax.Array:
+    """Inclusive running max of write marks along the txn axis."""
+    return jax.lax.cummax(marks, axis=0)
+
+
+def exclusive_cummax_ref(marks: jax.Array) -> jax.Array:
+    """(n+1, L) exclusive table: row j = max of rows < j (row 0 = -1)."""
+    zero = jnp.full((1, marks.shape[1]), -1, dtype=marks.dtype)
+    return jnp.concatenate([zero, jax.lax.cummax(marks, axis=0)], axis=0)

@@ -1,0 +1,16 @@
+"""Jitted public wrapper for the selective scan."""
+import jax
+
+from repro.kernels.selective_scan import kernel, ref
+
+
+def selective_scan(x, dt, a, b, c, *, impl: str = "xla",
+                   block_t: int = 128, block_d: int = 512, chunk: int = 64):
+    """impl: 'xla' (chunked scan, production) | 'xla_naive' | 'pallas'."""
+    if impl == "pallas":
+        return kernel.selective_scan(
+            x, dt, a, b, c, block_t=block_t, block_d=block_d,
+            interpret=jax.default_backend() != "tpu")
+    if impl == "xla_naive":
+        return ref.selective_scan_ref(x, dt, a, b, c)
+    return ref.selective_scan_chunked(x, dt, a, b, c, chunk=chunk)

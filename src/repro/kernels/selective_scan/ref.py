@@ -1,0 +1,95 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan (associative-scan form).
+
+The recurrence h_t = g_t * h_{t-1} + u_t is a first-order linear scan, so it
+admits the associative combine (g, u) ∘ (g', u') = (g·g', g'·u + u'); this is
+also the production XLA path used by models/mamba.py (log-depth on TPU).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, a, b, c):
+    """x, dt: (B, T, D); a: (D, S); b, c: (B, T, S) -> y: (B, T, D)."""
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    af, bf, cf = a.astype(jnp.float32), b.astype(jnp.float32), c.astype(jnp.float32)
+    g = jnp.exp(dtf[..., None] * af[None, None])              # (B,T,D,S)
+    u = (dtf * xf)[..., None] * bf[:, :, None, :]             # (B,T,D,S)
+
+    def combine(p, q):
+        (gp, up), (gq, uq) = p, q
+        return gp * gq, gq * up + uq
+
+    _, h = jax.lax.associative_scan(combine, (g, u), axis=1)
+    y = jnp.einsum("btds,bts->btd", h, cf)
+    return y.astype(x.dtype)
+
+
+def selective_scan_chunked(x, dt, a, b, c, chunk: int = 64):
+    """Two-level scan: sequential over time-chunks, associative within.
+
+    The flat associative scan materializes (B, T, D, N) — at d_inner=8192,
+    T=32k that is terabytes.  Chunking bounds live state memory to
+    (B, chunk, D, N) transient + a (B, D, N) carry, which is the XLA
+    production path (the Pallas kernel streams the same schedule in VMEM).
+    """
+    bsz, t, d = x.shape
+    n = a.shape[1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def chunk_arrays(arr):
+        return arr.reshape(bsz, nc, chunk, *arr.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunk_arrays(x.astype(jnp.float32)),
+          chunk_arrays(dt.astype(jnp.float32)),
+          chunk_arrays(b.astype(jnp.float32)),
+          chunk_arrays(c.astype(jnp.float32)))
+    af = a.astype(jnp.float32)
+
+    def combine(p, q):
+        (gp, up), (gq, uq) = p, q
+        return gp * gq, gq * up + uq
+
+    # checkpointed: backward recomputes the (B, chunk, D, N) scan states per
+    # chunk instead of keeping every chunk's states alive simultaneously.
+    @jax.checkpoint
+    def per_chunk(h0, inp):
+        xc, dtc, bc, cc = inp                          # (B, c, ...)
+        g = jnp.exp(dtc[..., None] * af[None, None])   # (B,c,D,N)
+        u = (dtc * xc)[..., None] * bc[:, :, None, :]
+        gs, hs = jax.lax.associative_scan(combine, (g, u), axis=1)
+        hs = hs + gs * h0[:, None]                     # fold in carry
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cc)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    _, ys = jax.lax.scan(per_chunk, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, nc * chunk, d)[:, :t]
+    return y.astype(x.dtype)
+
+
+def selective_scan_seq_ref(x, dt, a, b, c):
+    """Step-by-step lax.scan reference (slow, maximally literal)."""
+    bsz, t, d = x.shape
+    s = a.shape[1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t[..., None] * a[None])            # (B,D,S)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((bsz, d, s), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

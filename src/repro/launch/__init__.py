@@ -1,0 +1,1 @@
+"""Production mesh, multi-pod dry-run, train/serve drivers, HLO analysis."""

@@ -1,0 +1,97 @@
+"""Analytic per-device HBM-traffic model for the roofline memory term.
+
+Why analytic: the dry-run lowers for the *CPU* backend, which legalizes every
+bf16 dot as convert->f32-dot.  Those converts get loop-hoisted into full f32
+copies of scanned weights/caches, so byte counts read off the CPU HLO
+overstate TPU HBM traffic by 2-10x (the TPU backend has native bf16 MXU ops
+and fuses converts).  FLOPs and collective bytes are unaffected (dot shapes
+and collective shapes are identical), so those come from the HLO walker;
+the memory term comes from this model.
+
+Model (per device, per step), documented term by term in code:
+  params:       fwd read + bwd read + remat re-read (train), 1 read (serve)
+  grads:        f32 accumulator read+write per microbatch (train)
+  optimizer:    p rw + m rw + v rw at their storage dtypes
+  activations:  C_layer passes over the (tokens_loc x d_model) stream per
+                layer (C≈12 covers norms/proj/residual reads+writes), x3 for
+                fwd+remat+bwd when training
+  attention:    q/k/v/o kernel traffic (flash kernel: no S^2 HBM traffic)
+  scores (dec): decode reads the whole local KV cache per step
+  logits:       chunked CE writes+reads each logit once in f32
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as MDL
+from repro.optim import adamw
+from repro.runtime import steps as RT
+
+
+def _tree_bytes(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(cfg: ArchConfig, dtype=jnp.bfloat16) -> int:
+    params = jax.eval_shape(
+        lambda: MDL.init_params(jax.random.PRNGKey(0), cfg, dtype))
+    return _tree_bytes(params)
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, seq: int,
+                dtype=jnp.bfloat16) -> int:
+    cache = jax.eval_shape(lambda: MDL.init_cache(cfg, batch, seq, dtype))
+    return _tree_bytes(cache)
+
+
+def bytes_model(cfg: ArchConfig, shape: ShapeConfig, n_dev: int,
+                tp: int = 16) -> dict:
+    p_total = param_bytes(cfg)                       # bf16 storage
+    p_loc = p_total / (n_dev if cfg.fsdp else tp)
+    d = cfg.d_model
+    v_loc = cfg.padded_vocab / tp
+    tokens_loc = shape.global_batch * shape.seq_len / n_dev  # batch x seq sharding
+    kv_dim = cfg.n_kv_heads * cfg.resolved_head_dim
+    q_dim = cfg.n_heads * cfg.resolved_head_dim
+
+    out = {}
+    if shape.kind == "train":
+        m = cfg.train_microbatches
+        remat = 1 if cfg.remat == "block" else 0
+        out["params"] = m * (2 + remat) * p_loc
+        out["grads"] = m * 2 * (p_total * 2 / n_dev)          # f32 accum rw
+        mv_bytes = p_total * (1.0 if cfg.opt_state_dtype == "bfloat16" else 2.0)
+        out["optimizer"] = 2 * p_loc + 4 * (mv_bytes / (n_dev if cfg.fsdp else tp))
+        passes = 2 + remat                                    # fwd+bwd(+remat)
+        n_mix_layers = cfg.n_layers + cfg.encoder_layers
+        out["activations"] = passes * 12 * n_mix_layers * tokens_loc * d * 2
+        if cfg.n_heads:
+            out["attention_io"] = passes * 2 * (q_dim + 2 * kv_dim + q_dim) \
+                * tokens_loc * cfg.n_layers / max(
+                    1, cfg.attn_every if cfg.family == "hybrid" else 1)
+        if cfg.n_experts:
+            out["moe_dispatch"] = passes * 2 * cfg.top_k * cfg.capacity_factor \
+                * tokens_loc * d * 2 * cfg.n_layers
+        out["logits"] = 2 * tokens_loc * v_loc * 4
+    elif shape.kind == "prefill":
+        out["params"] = p_loc
+        n_mix_layers = cfg.n_layers + cfg.encoder_layers
+        out["activations"] = 12 * n_mix_layers * tokens_loc * d * 2
+        if cfg.n_heads:
+            out["attention_io"] = 2 * (2 * q_dim + 2 * kv_dim) * tokens_loc \
+                * cfg.n_layers
+        out["logits"] = 2 * (shape.global_batch / min(n_dev, shape.global_batch)) \
+            * v_loc * 4
+    else:  # decode
+        out["params"] = p_loc
+        c_bytes = cache_bytes(cfg, shape.global_batch, shape.seq_len)
+        out["cache_read"] = c_bytes / n_dev
+        out["cache_write"] = c_bytes / n_dev / max(shape.seq_len, 1)
+        b_loc = shape.global_batch / min(n_dev, max(shape.global_batch, 1))
+        out["activations"] = 12 * (cfg.n_layers + cfg.encoder_layers) \
+            * b_loc * d * 2
+        out["logits"] = 2 * b_loc * v_loc * 4
+    out["total"] = float(sum(out.values()))
+    return out

@@ -1,0 +1,183 @@
+"""Dry-run cell logic: lower + compile one (arch × shape × mesh) and extract
+memory / cost / collective statistics.
+
+Shared by launch/dryrun.py (production 512-device meshes) and the tests
+(small host meshes).  No real allocation ever happens: all inputs are
+``ShapeDtypeStruct`` trees and only ``.lower().compile()`` is invoked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES_BY_NAME, get_arch
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed import meshctx
+from repro.launch import hlo_analysis
+from repro.models import model as MDL
+from repro.optim import adamw
+from repro.runtime import steps as RT
+
+# --- hardware constants (TPU v5e) -----------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-axis aggregate per chip)
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """6·N_active·tokens (train) or 2·N_active·batch (one decode step)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                       # ok | skipped | failed
+    note: str = ""
+    n_devices: int = 0
+    # trip-count-aware, per-device-per-step (hlo_analysis walker):
+    flops_dev: float = 0.0
+    bytes_dev_hlo: float = 0.0           # CPU-lowering HLO bytes (conservative)
+    bytes_dev: float = 0.0               # analytic TPU HBM model (launch/analytic)
+    bytes_breakdown: Optional[dict] = None
+    collectives: Optional[dict] = None   # per-device link bytes by op
+    # raw cost_analysis (counts while bodies once; kept for reference):
+    xla_flops_raw: float = 0.0
+    xla_bytes_raw: float = 0.0
+    memory: Optional[dict] = None        # per-device, from memory_analysis
+    model_flops: float = 0.0             # 6·N·D (train) / 2·N·B (decode), global
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    params: float = 0.0
+    active_params: float = 0.0
+
+    def roofline(self) -> dict:
+        n = max(self.n_devices, 1)
+        t_compute = self.flops_dev / PEAK_FLOPS
+        t_memory = self.bytes_dev / HBM_BW
+        coll = (self.collectives or {}).get("collective_bytes", 0.0)
+        t_coll = coll / ICI_BW          # per-chip link bytes
+        terms = {"compute_s": t_compute, "memory_s": t_memory,
+                 "collective_s": t_coll}
+        bound = max(terms, key=terms.get)
+        model_dev = self.model_flops / n
+        useful = model_dev / self.flops_dev if self.flops_dev else 0.0
+        t_ideal = model_dev / PEAK_FLOPS
+        return {**terms, "bound": bound.replace("_s", ""),
+                "useful_flops_ratio": useful,
+                "roofline_fraction":
+                    t_ideal / max(max(terms.values()), 1e-30)}
+
+
+def _prefill_step(cfg: ArchConfig, impl: str = "xla"):
+    """Prefill lowering: forward to hidden states, unembed ONLY the last
+    position (materializing (B, S, V) logits would cost ~17 GiB/device at
+    32k x 256k-vocab)."""
+    def step(params, batch):
+        hidden, _ = MDL.train_hidden(params, batch, cfg, impl=impl)
+        from repro.models import layers as L
+        logits = L.unembed(params["embed"], hidden[:, -1:], cfg)
+        return jnp.argmax(logits[:, 0], axis=-1)
+    return step
+
+
+def run_cell(arch_name: str, shape_name: str, mesh,
+             mesh_label: str) -> CellResult:
+    cfg = get_arch(arch_name)
+    shape = SHAPES_BY_NAME[shape_name]
+    res = CellResult(arch=arch_name, shape=shape_name, mesh=mesh_label,
+                     status="ok", n_devices=mesh.devices.size,
+                     params=float(cfg.param_count()),
+                     active_params=float(cfg.active_param_count()))
+
+    if shape.name == "long_500k" and not cfg.supports_long:
+        res.status, res.note = "skipped", \
+            "full quadratic attention; sub-quadratic mixing required " \
+            "(DESIGN.md §6)"
+        return res
+
+    opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    with meshctx.use_mesh(mesh):
+        t0 = time.time()
+        if shape.kind == "train":
+            fn = RT.jit_train_step(cfg, shape, mesh, opt_cfg,
+                                   microbatches=cfg.train_microbatches)
+            state = RT.train_state_struct(cfg, opt_cfg, jnp.bfloat16)
+            batch = MDL.batch_struct(cfg, shape, jnp.bfloat16)
+            lowered = fn.lower(state, batch)
+        elif shape.kind == "prefill":
+            sspec = meshctx.tree_shardings(MDL.param_specs(cfg), mesh)
+            bspec = meshctx.tree_shardings(MDL.batch_specs(cfg, shape), mesh)
+            fn = jax.jit(_prefill_step(cfg), in_shardings=(sspec, bspec))
+            params = jax.eval_shape(
+                lambda: MDL.init_params(jax.random.PRNGKey(0), cfg,
+                                        jnp.bfloat16))
+            batch = MDL.batch_struct(cfg, shape, jnp.bfloat16)
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            fn = RT.jit_serve_step(cfg, shape, mesh)
+            params = jax.eval_shape(
+                lambda: MDL.init_params(jax.random.PRNGKey(0), cfg,
+                                        jnp.bfloat16))
+            cache = RT.cache_struct(cfg, shape.global_batch, shape.seq_len,
+                                    jnp.bfloat16)
+            toks = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            lowered = fn.lower(params, cache, toks)
+        res.lower_s = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        res.compile_s = time.time() - t0
+
+        cost = compiled.cost_analysis() or {}
+        res.xla_flops_raw = float(cost.get("flops", 0.0))
+        res.xla_bytes_raw = float(cost.get("bytes accessed", 0.0))
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            res.memory = {
+                k: float(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            }
+        agg = hlo_analysis.aggregate(compiled.as_text())
+        res.flops_dev = agg["flops"]
+        res.bytes_dev_hlo = agg["bytes"]
+        res.collectives = {k: v for k, v in agg.items()
+                           if k not in ("flops", "bytes", "entry")}
+        from repro.launch import analytic
+        res.bytes_breakdown = analytic.bytes_model(cfg, shape,
+                                                   mesh.devices.size)
+        res.bytes_dev = res.bytes_breakdown["total"]
+        res.model_flops = model_flops(cfg, shape)
+    return res
+
+
+def save_results(results: list, path: str) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    existing = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for r in json.load(f):
+                existing[(r["arch"], r["shape"], r["mesh"])] = r
+    for r in results:
+        d = dataclasses.asdict(r)
+        if r.status == "ok":
+            d["roofline"] = r.roofline()
+        existing[(r.arch, r.shape, r.mesh)] = d
+    with open(path, "w") as f:
+        json.dump(list(existing.values()), f, indent=1)

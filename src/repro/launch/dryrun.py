@@ -1,0 +1,80 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver.
+
+Proves the distribution config is coherent without hardware: for every
+(architecture × input shape) the production train/serve step is
+``.lower().compile()``d against the 16x16 single-pod mesh AND the 2x16x16
+multi-pod mesh, printing memory and cost analysis and recording roofline
+inputs to JSON (read by benchmarks/roofline.py and EXPERIMENTS.md).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single --out benchmarks/results/dryrun.json
+"""
+import argparse
+import json
+import sys
+import traceback
+
+import jax  # noqa: E402  (must come after XLA_FLAGS is set)
+
+from repro.configs import ARCHS, SHAPES  # noqa: E402
+from repro.launch import drylib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch name, comma list, or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name, comma list, or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    results, failed = [], 0
+    for mesh_label, mesh in meshes:
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    r = drylib.run_cell(arch, shape, mesh, mesh_label)
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    r = drylib.CellResult(arch=arch, shape=shape,
+                                          mesh=mesh_label, status="failed",
+                                          note=f"{type(e).__name__}: {e}")
+                    failed += 1
+                results.append(r)
+                tag = f"[{mesh_label}] {arch} x {shape}"
+                if r.status == "ok":
+                    rf = r.roofline()
+                    mem = (r.memory or {})
+                    print(f"{tag}: OK flops/dev={r.flops_dev:.3e} "
+                          f"bytes/dev={r.bytes_dev:.3e} "
+                          f"coll/dev={r.collectives['collective_bytes']:.3e} "
+                          f"bound={rf['bound']} "
+                          f"rf={rf['roofline_fraction']:.3f} "
+                          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"compile={r.compile_s:.1f}s")
+                else:
+                    print(f"{tag}: {r.status.upper()} {r.note}")
+                drylib.save_results([r], args.out)
+    print(f"\n{len(results)} cells, {failed} failed -> {args.out}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

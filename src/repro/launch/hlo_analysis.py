@@ -1,0 +1,281 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO.
+
+``compiled.cost_analysis()`` counts every computation ONCE — including the
+bodies of ``while`` loops, so a 96-layer ``lax.scan`` transformer reports
+1/96th of its matmul FLOPs and one layer's collectives.  This module walks
+the HLO text instead:
+
+  * splits the module into computations and builds per-computation symbol
+    tables (instruction name -> shape),
+  * extracts per-computation dot/convolution FLOPs and collective bytes,
+  * resolves the call graph (while/fusion/calls/to_apply/conditional),
+  * reads while trip counts from ``backend_config known_trip_count`` (with a
+    loop-condition-constant fallback),
+  * aggregates cost from ENTRY with multiplicity = product of trip counts.
+
+Shapes in post-partitioning HLO are per-device, so all results are
+per-device-per-step — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1, "s4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+"
+                     r"\[[\d,]*\](?:\{[^}]*\})?)\s+([\w\-]+)")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def _shape_elems(s: str) -> tuple[Optional[str], int]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None, 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return dt, n
+
+
+def _all_shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+# opcodes that move HBM bytes (top-level instruction ≈ one kernel; traffic =
+# operand reads + result writes, the same convention as XLA 'bytes accessed')
+_TRAFFIC_OPS = {
+    "fusion", "dot", "convolution", "copy", "reduce", "reduce-window",
+    "scatter", "gather", "sort", "transpose", "broadcast", "concatenate",
+    "dynamic-slice", "dynamic-update-slice", "pad", "slice", "select",
+    "add", "multiply", "subtract", "divide", "exponential", "log", "tanh",
+    "maximum", "minimum", "compare", "convert", "rsqrt", "sqrt", "iota",
+    "custom-call", "cholesky", "triangular-solve", "rng", "reverse", "clamp",
+}
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "reshape", "opt-barrier",
+}
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.collectives = {k: 0.0 for k in COLLECTIVES}
+        self.collective_counts = {k: 0 for k in COLLECTIVES}
+        self.calls: list[str] = []
+        self.call_no_cost: list[str] = []  # fusion internals: no extra traffic
+        self.whiles: list[tuple[str, str, Optional[int]]] = []  # body, cond, n
+        self.constants: list[int] = []
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is not None and line:
+            comps[cur].append(line)
+    return comps
+
+
+def _operand_names(line: str, op: str) -> list[str]:
+    idx = line.find(f" {op}(")
+    if idx < 0:
+        idx = line.find(f" {op}-start(")
+        op = f"{op}-start"
+        if idx < 0:
+            return []
+    args = line[idx + len(op) + 2:]
+    depth = 1
+    out, cur = [], ""
+    for ch in args:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            if ch == "," and depth == 1:
+                out.append(cur.strip())
+                cur = ""
+            else:
+                cur += ch
+    if cur.strip():
+        out.append(cur.strip())
+    return [o.lstrip("%") for o in out if o.strip().startswith("%")]
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    for name, lines in _split_computations(text).items():
+        c = Computation(name)
+        shapes: dict[str, str] = {}
+        # pass 1: symbol table
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+        # pass 2: costs + edges
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            result_shape, opcode = dm.group(2), dm.group(3)
+
+            base_op = opcode.replace("-start", "").replace("-done", "")
+            if base_op not in _NO_TRAFFIC_OPS and not opcode.endswith("-done"):
+                rbytes = _all_shape_bytes(result_shape)
+                ops = _operand_names(line, opcode)
+                obytes = sum(_all_shape_bytes(shapes.get(o, ""))
+                             for o in ops)
+                # in-place / sparse-access ops: count touched bytes, not the
+                # whole buffer (XLA aliases DUS/scatter; gather reads rows).
+                if base_op in ("dynamic-update-slice", "scatter"):
+                    upd = ops[1] if base_op == "dynamic-update-slice" else \
+                        (ops[2] if len(ops) > 2 else ops[-1])
+                    c.bytes += 2 * _all_shape_bytes(shapes.get(upd, ""))
+                elif base_op in ("gather", "dynamic-slice", "slice"):
+                    c.bytes += 2 * rbytes
+                elif base_op == "copy":
+                    pass  # loop-carry copies; elided/donated on TPU
+                else:
+                    c.bytes += rbytes + obytes
+
+            if opcode == "dot":
+                _, relems = _shape_elems(result_shape.strip("("))
+                ops = _operand_names(line, "dot")
+                contract = 1
+                mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                if mc and ops:
+                    lhs_shape = shapes.get(ops[0], "")
+                    sm = _SHAPE_RE.match(lhs_shape)
+                    if sm:
+                        ldims = [int(d) for d in sm.group(2).split(",") if d]
+                        for i in mc.group(1).split(","):
+                            if i and int(i) < len(ldims):
+                                contract *= ldims[int(i)]
+                c.flops += 2.0 * relems * contract
+            elif opcode == "convolution":
+                _, relems = _shape_elems(result_shape)
+                mw = re.search(r"window=\{size=([\dx]+)", line)
+                ksize = 1
+                if mw:
+                    for d in mw.group(1).split("x"):
+                        ksize *= int(d)
+                c.flops += 2.0 * relems * ksize
+            elif opcode in COLLECTIVES or \
+                    opcode.replace("-start", "") in COLLECTIVES:
+                base = opcode.replace("-start", "")
+                result_bytes = _all_shape_bytes(result_shape)
+                ops = _operand_names(line, base)
+                operand_bytes = sum(_all_shape_bytes(shapes.get(o, ""))
+                                    for o in ops)
+                if base == "all-gather":
+                    c.collectives[base] += result_bytes
+                elif base == "all-reduce":
+                    c.collectives[base] += 2 * operand_bytes
+                else:
+                    c.collectives[base] += operand_bytes
+                c.collective_counts[base] += 1
+            elif opcode == "while":
+                mw_ = re.search(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)",
+                                line)
+                trip = None
+                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+                if mt:
+                    trip = int(mt.group(1))
+                if mw_:
+                    c.whiles.append((mw_.group(2), mw_.group(1), trip))
+            elif opcode == "constant":
+                mconst = re.search(r"constant\((\d+)\)", line)
+                if mconst and re.match(r"[su]\d+\[\]", result_shape):
+                    c.constants.append(int(mconst.group(1)))
+
+            # fusion / reduce internals: count their FLOPs, not their traffic
+            for attr in ("calls", "to_apply"):
+                ma = re.search(rf"{attr}=%?([\w\.\-]+)", line)
+                if ma:
+                    c.call_no_cost.append(ma.group(1))
+            mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if mb:
+                for callee in mb.group(1).split(","):
+                    c.calls.append(callee.strip().lstrip("%"))
+        comps[name] = c
+    return comps
+
+
+def aggregate(text: str) -> dict:
+    comps = parse_module(text)
+    entry = None
+    for name in comps:
+        if name.split(".")[0] == "main":
+            entry = name
+    if entry is None:
+        called = {x for c in comps.values() for x in c.calls}
+        called |= {b for c in comps.values() for b, _, _ in c.whiles}
+        called |= {cd for c in comps.values() for _, cd, _ in c.whiles}
+        roots = [n for n in comps if n not in called]
+        entry = roots[0] if roots else next(iter(comps))
+
+    totals = {"flops": 0.0, "bytes": 0.0, **{k: 0.0 for k in COLLECTIVES},
+              **{f"n_{k}": 0.0 for k in COLLECTIVES}}
+    stack = []
+
+    def visit(name: str, mult: float, count_bytes: bool):
+        if name not in comps or name in stack or mult <= 0:
+            return
+        c = comps[name]
+        stack.append(name)
+        totals["flops"] += mult * c.flops
+        if count_bytes:
+            totals["bytes"] += mult * c.bytes
+        for k in COLLECTIVES:
+            totals[k] += mult * c.collectives[k]
+            totals[f"n_{k}"] += mult * c.collective_counts[k]
+        for callee in c.calls:
+            visit(callee, mult, count_bytes)
+        for callee in c.call_no_cost:
+            visit(callee, mult, False)
+        for body, cond, trip in c.whiles:
+            if trip is None:
+                cc = comps.get(cond)
+                trip = max(cc.constants) if cc and cc.constants else 1
+            visit(cond, mult * trip, count_bytes)
+            visit(body, mult * trip, count_bytes)
+        stack.pop()
+
+    visit(entry, 1.0, True)
+    totals["collective_bytes"] = sum(totals[k] for k in COLLECTIVES)
+    totals["entry"] = entry
+    return totals

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state.  Production target: TPU v5e, 256 chips/pod, 16x16 (data, model);
+multi-pod doubles with a leading 'pod' axis (data parallelism across pods —
+the lowest-bandwidth dimension carries only gradient all-reduces).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the actually-available devices (tests/examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"))

@@ -1,0 +1,1 @@
+"""Model zoo: dense/GQA, MoE (EP), Mamba-1/2, hybrid, enc-dec, stubs."""

@@ -1,0 +1,213 @@
+"""Encoder-decoder backbone (Whisper-style) with a stub audio frontend.
+
+Per the brief, the conv frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, D).  Positions are absolute
+sinusoidal (parameter-free; Whisper's learned decoder table is replaced so
+arbitrary decode lengths lower cleanly — deviation noted in DESIGN.md).
+The encoder self-attention is bidirectional; the decoder interleaves causal
+self-attention and cross-attention to the encoder output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ArchConfig
+from repro.distributed.meshctx import BATCH, MODEL, constrain
+from repro.models import layers as L
+
+F32 = jnp.float32
+ENC_FRAMES = 1500        # Whisper 30 s @ 50 Hz after the conv stub
+
+
+def _init_xattn(key, cfg: ArchConfig, dtype) -> dict:
+    # cross-attention: full MHA (Whisper kv == q heads)
+    return L.init_attention(key, cfg, dtype)
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    kenc, kdec, kemb = random.split(key, 3)
+    enc_keys = random.split(kenc, cfg.encoder_layers)
+    dec_keys = random.split(kdec, cfg.n_layers)
+
+    def enc_block(k):
+        k1, k2 = random.split(k)
+        return {"ln1": L.init_norm(cfg, dtype),
+                "attn": L.init_attention(k1, cfg, dtype),
+                "ln2": L.init_norm(cfg, dtype),
+                "mlp": L.init_mlp(k2, cfg, dtype)}
+
+    def dec_block(k):
+        k1, k2, k3 = random.split(k, 3)
+        return {"ln1": L.init_norm(cfg, dtype),
+                "attn": L.init_attention(k1, cfg, dtype),
+                "lnx": L.init_norm(cfg, dtype),
+                "xattn": _init_xattn(k2, cfg, dtype),
+                "ln2": L.init_norm(cfg, dtype),
+                "mlp": L.init_mlp(k3, cfg, dtype)}
+
+    return {
+        "embed": L.init_embed(kemb, cfg, dtype),
+        "enc_blocks": jax.vmap(enc_block)(enc_keys),
+        "enc_norm": L.init_norm(cfg, dtype),
+        "dec_blocks": jax.vmap(dec_block)(dec_keys),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    fsdp = "data" if cfg.fsdp else None
+    enc = {"ln1": L.spec_norm(cfg), "attn": L.spec_attention(cfg, fsdp),
+           "ln2": L.spec_norm(cfg), "mlp": L.spec_mlp(cfg, fsdp)}
+    dec = {"ln1": L.spec_norm(cfg), "attn": L.spec_attention(cfg, fsdp),
+           "lnx": L.spec_norm(cfg), "xattn": L.spec_attention(cfg, fsdp),
+           "ln2": L.spec_norm(cfg), "mlp": L.spec_mlp(cfg, fsdp)}
+    stack = lambda t: jax.tree_util.tree_map(
+        lambda s: (None,) + tuple(s), t, is_leaf=lambda s: isinstance(s, tuple))
+    return {"embed": L.spec_embed(cfg, fsdp),
+            "enc_blocks": stack(enc), "enc_norm": L.spec_norm(cfg),
+            "dec_blocks": stack(dec), "final_norm": L.spec_norm(cfg)}
+
+
+def _xattn_fwd(p, x, enc_kv, cfg: ArchConfig, impl: str):
+    """Cross-attention: queries from x, keys/values precomputed from encoder."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    from repro.kernels.flash_attention import ops as fa_ops
+    out = fa_ops.attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                           v.swapaxes(1, 2), causal=False,
+                           scale=cfg.resolved_head_dim ** -0.5, impl=impl)
+    out = out.swapaxes(1, 2)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+def _enc_kv(p, enc_out, cfg: ArchConfig):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"],
+                   preferred_element_type=F32).astype(enc_out.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"],
+                   preferred_element_type=F32).astype(enc_out.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(enc_out.dtype)
+        v = v + p["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def encode(params, frames: jax.Array, cfg: ArchConfig, *,
+           impl: str = "xla") -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings -> encoder hidden states."""
+    pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = (frames.astype(F32) + pos[None]).astype(frames.dtype)
+    x = constrain(x, BATCH, None, None)
+
+    def body(h, lp):
+        h = h + L.attention(lp["attn"], L.norm(lp["ln1"], h, cfg), cfg,
+                            causal=False, impl=impl)
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), cfg)
+        return h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.norm(params["enc_norm"], x, cfg)
+
+
+def decode_train(params, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ArchConfig, *, impl: str = "xla",
+                 return_hidden: bool = False) -> jax.Array:
+    """Teacher-forced decoder. tokens: (B, S_dec) -> logits (B, S_dec, V)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    pos = L.sinusoidal_positions(tokens.shape[1], cfg.d_model)
+    x = (x.astype(F32) + pos[None]).astype(x.dtype)
+
+    def body(h, lp):
+        h = h + L.attention(lp["attn"], L.norm(lp["ln1"], h, cfg), cfg,
+                            causal=True, impl=impl)
+        kv = _enc_kv(lp["xattn"], enc_out, cfg)
+        h = h + _xattn_fwd(lp["xattn"], L.norm(lp["lnx"], h, cfg), kv, cfg,
+                           impl)
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), cfg)
+        return h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.norm(params["final_norm"], x, cfg)
+    if return_hidden:
+        return x
+    return L.unembed(params["embed"], x, cfg)
+
+
+def forward_train(params, frames: jax.Array, tokens: jax.Array,
+                  cfg: ArchConfig, *, impl: str = "xla",
+                  return_hidden: bool = False):
+    enc_out = encode(params, frames, cfg, impl=impl)
+    out = decode_train(params, tokens, enc_out, cfg, impl=impl,
+                       return_hidden=return_hidden)
+    return out, jnp.zeros((), F32)
+
+
+# ---------------------------------------------------------------------------
+# decode with self-attn KV cache + precomputed cross K/V
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    h = cfg.n_heads
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+        # cross-attention K/V, precomputed from the encoder output once
+        "xk": jnp.zeros((cfg.n_layers, batch, ENC_FRAMES, h, hd), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, ENC_FRAMES, h, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ArchConfig):
+    kvspec = (None,) + L.cache_spec(cfg)
+    xspec = (None, BATCH, None, MODEL if cfg.n_heads % 16 == 0 else None, None)
+    return {"k": kvspec, "v": kvspec, "xk": xspec, "xv": xspec, "pos": ()}
+
+
+def precompute_cross_kv(params, enc_out: jax.Array, cfg: ArchConfig):
+    def body(_, lp):
+        k, v = _enc_kv(lp["xattn"], enc_out, cfg)
+        return None, (k, v)
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_blocks"])
+    return xk, xv
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ArchConfig):
+    """tokens: (B,) -> (logits (B, V), new_cache)."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    pe = L.sinusoidal_positions(1, cfg.d_model)  # position `pos`: recompute
+    half = cfg.d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=F32)
+                    * (jnp.log(10000.0) / (half - 1)))
+    ang = pos.astype(F32) * freqs
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+    x = (x.astype(F32) + pe).astype(x.dtype)
+
+    def body(h, scanned):
+        lp, ck, cv, xk, xv = scanned
+        y, ck, cv = L.attention_decode(
+            lp["attn"], L.norm(lp["ln1"], h, cfg), ck, cv, pos, cfg)
+        h = h + y
+        h = h + _xattn_fwd(lp["xattn"], L.norm(lp["lnx"], h, cfg), (xk, xv),
+                           cfg, "xla")
+        h = h + L.mlp(lp["mlp"], L.norm(lp["ln2"], h, cfg), cfg)
+        return h, (ck, cv)
+
+    h, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = L.norm(params["final_norm"], h, cfg)
+    logits = L.unembed(params["embed"], h, cfg)[:, 0]
+    new_cache = dict(cache, k=k_new, v=v_new, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,317 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLP variants.
+
+Conventions
+-----------
+* Params are plain nested dicts of jnp arrays; every ``init_*`` has a sibling
+  ``spec_*`` returning the identically-structured tree of PartitionSpec
+  tuples (logical axes; see repro.distributed.meshctx).
+* Attention supports two TP layouts, chosen per-arch by head divisibility:
+    - 'heads'    : Q (and KV when divisible) heads sharded over `model`
+    - 'sequence' : context parallelism — activations sharded over `model`
+                   on the sequence axis; attention weights FSDP-only
+* All matmuls accumulate in f32 (`preferred_element_type`), params stored in
+  the config dtype (bf16 for the big dry-run configs, f32 for smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ArchConfig
+from repro.distributed.meshctx import BATCH, MODEL, constrain
+from repro.kernels.flash_attention import ops as fa_ops
+
+F32 = jnp.float32
+
+
+def attn_mode(cfg: ArchConfig, tp: int = 16) -> str:
+    """'heads' TP when the query heads divide the model axis, else 'sequence'."""
+    return "heads" if cfg.n_heads % tp == 0 else "sequence"
+
+
+def kv_sharded(cfg: ArchConfig, tp: int = 16) -> bool:
+    return cfg.n_kv_heads % tp == 0
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def spec_rmsnorm() -> dict:
+    return {"scale": (None,)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(F32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def spec_layernorm() -> dict:
+    return {"scale": (None,), "bias": (None,)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(F32) + p["bias"].astype(F32)).astype(x.dtype)
+
+
+def norm(p: dict, x: jax.Array, cfg, eps: float | None = None) -> jax.Array:
+    eps = cfg.norm_eps if eps is None else eps
+    if cfg.norm_type == "layernorm":
+        return layernorm(p, x, eps)
+    return rmsnorm(p, x, eps)
+
+
+def init_norm(cfg, dtype) -> dict:
+    if cfg.norm_type == "layernorm":
+        return init_layernorm(cfg.d_model, dtype)
+    return init_rmsnorm(cfg.d_model, dtype)
+
+
+def spec_norm(cfg) -> dict:
+    if cfg.norm_type == "layernorm":
+        return spec_layernorm()
+    return spec_rmsnorm()
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal position encodings (S, D)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=F32) * (jnp.log(10000.0) / (half - 1)))
+    angles = jnp.arange(seq, dtype=F32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    angles = positions.astype(F32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                    # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": random.normal(k1, (d, h, hd), dtype) * scale,
+        "wk": random.normal(k2, (d, kv, hd), dtype) * scale,
+        "wv": random.normal(k3, (d, kv, hd), dtype) * scale,
+        "wo": random.normal(k4, (h, hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def spec_attention(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    mode = attn_mode(cfg)
+    head_ax = MODEL if mode == "heads" else None
+    kv_ax = MODEL if (mode == "heads" and kv_sharded(cfg)) else None
+    p = {
+        "wq": (fsdp, head_ax, None),
+        "wk": (fsdp, kv_ax, None),
+        "wv": (fsdp, kv_ax, None),
+        "wo": (head_ax, None, fsdp),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = (head_ax, None)
+        p["bk"] = (kv_ax, None)
+        p["bv"] = (kv_ax, None)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=F32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=F32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention(p, x, cfg: ArchConfig, *, causal: bool = True,
+              positions: Optional[jax.Array] = None,
+              impl: str = "xla") -> jax.Array:
+    """Full (training / prefill) self-attention. x: (B, S, D)."""
+    b, s, _ = x.shape
+    mode = attn_mode(cfg)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    if mode == "sequence":
+        x = constrain(x, BATCH, MODEL, None)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if mode == "heads":
+        q = constrain(q, BATCH, None, MODEL, None)
+        kv_ax = MODEL if kv_sharded(cfg) else None
+        k = constrain(k, BATCH, None, kv_ax, None)
+        v = constrain(v, BATCH, None, kv_ax, None)
+    else:
+        q = constrain(q, BATCH, MODEL, None, None)
+        # context parallelism: every shard sees full K/V (XLA all-gathers).
+        k = constrain(k, BATCH, None, None, None)
+        v = constrain(v, BATCH, None, None, None)
+    out = fa_ops.attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                           v.swapaxes(1, 2), causal=causal,
+                           scale=cfg.resolved_head_dim ** -0.5, impl=impl,
+                           expand_kv=(mode == "heads"))
+    out = out.swapaxes(1, 2)                              # (B, S, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    if mode == "sequence":
+        y = constrain(y, BATCH, MODEL, None)
+    return y
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ArchConfig):
+    """One-token decode. x: (B, 1, D); cache_[kv]: (B, S_cache, KV, hd).
+
+    Returns (y, new_cache_k, new_cache_v). The cache is sharded over kv-heads
+    (when divisible) or over the sequence axis (partial-softmax reductions
+    become tiny model-axis all-reduces under SPMD).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    group = cfg.n_heads // cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    qh = q[:, 0].reshape(b, cfg.n_kv_heads, group, hd)
+    # native-dtype operands + f32 accumulation: no f32 copy of the cache
+    # (an .astype on the scanned cache gets hoisted by XLA into a full
+    # f32 materialization of the stacked cache).
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, cache_k,
+                   preferred_element_type=F32) * hd ** -0.5
+    seq = jnp.arange(cache_k.shape[1])[None, None, None, :]
+    s = jnp.where(seq <= pos, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=F32)
+    o = o.reshape(b, 1, cfg.n_heads, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                   preferred_element_type=F32).astype(x.dtype)
+    return y, cache_k, cache_v
+
+
+def cache_spec(cfg: ArchConfig):
+    """PartitionSpec (logical) for a (B, S, KV, hd) cache tensor."""
+    if kv_sharded(cfg):
+        return (BATCH, None, MODEL, None)
+    return (BATCH, MODEL, None, None)     # shard the sequence axis
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, dtype, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    ks = random.split(key, 3)
+    p = {
+        "w_in": random.normal(ks[0], (d, f), dtype) * d ** -0.5,
+        "w_out": random.normal(ks[1], (f, d), dtype) * f ** -0.5,
+    }
+    if gated:
+        p["w_gate"] = random.normal(ks[2], (d, f), dtype) * d ** -0.5
+    return p
+
+
+def spec_mlp(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {"w_in": (fsdp, MODEL), "w_out": (MODEL, fsdp)}
+    if gated:
+        p["w_gate"] = (fsdp, MODEL)
+    return p
+
+
+def mlp(p, x, cfg: ArchConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"],
+                   preferred_element_type=F32)
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                       preferred_element_type=F32)
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_type == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                       preferred_element_type=F32)
+        h = jax.nn.gelu(g, approximate=True) * h
+    elif cfg.mlp_type == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h.astype(x.dtype), BATCH, None, MODEL)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"],
+                      preferred_element_type=F32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ArchConfig, dtype) -> dict:
+    v, d = cfg.padded_vocab, cfg.d_model
+    p = {"tok": random.normal(key, (v, d), dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = random.normal(random.fold_in(key, 1), (d, v), dtype) * d ** -0.5
+    return p
+
+
+def spec_embed(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    p = {"tok": (MODEL, fsdp)}
+    if not cfg.tie_embeddings:
+        p["head"] = (fsdp, MODEL)
+    return p
+
+
+def embed(p, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["tok"], tokens, axis=0)
+    return constrain(x, BATCH, None, None)
+
+
+def unembed(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+    return constrain(logits, BATCH, None, MODEL)

@@ -1,0 +1,347 @@
+"""Mamba-1 (selective scan) and Mamba-2 (SSD, chunked) blocks.
+
+Sharding: the expanded channel axis ``d_inner`` (and Mamba-2 heads) shards
+over `model`; sequence stays unsharded (the scan is sequential in time).
+Train/prefill use the log-depth associative scan (XLA) or the Pallas
+``selective_scan`` kernel; decode is the O(1)-per-token recurrence on a
+carried state — this is what makes the ``long_500k`` shape tractable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ArchConfig
+from repro.distributed.meshctx import BATCH, MODEL, constrain
+from repro.kernels.selective_scan import ops as scan_ops
+
+F32 = jnp.float32
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, T, C); w: (C, K); causal depthwise conv."""
+    k = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(F32), w.T[:, None, :].astype(F32),   # (K, 1, C) OIW? see dn
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[0])
+    return (out + b.astype(F32)).astype(x.dtype)
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+               b: jax.Array):
+    """x_t: (B, C); conv_state: (B, K-1, C) -> (y_t, new_state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window.astype(F32), w.astype(F32)) \
+        + b.astype(F32)
+    return y.astype(x_t.dtype), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    r = dt_rank(cfg)
+    ks = random.split(key, 6)
+    return {
+        "in_proj": random.normal(ks[0], (d, 2 * di), dtype) * d ** -0.5,
+        "conv_w": random.normal(ks[1], (di, k), dtype) * k ** -0.5,
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": random.normal(ks[2], (di, r + 2 * n), dtype) * di ** -0.5,
+        "dt_proj": random.normal(ks[3], (r, di), dtype) * r ** -0.5,
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(random.uniform(ks[4], (di,), F32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))
+        ).astype(dtype),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=F32), (di, 1))
+                         ).astype(F32),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": random.normal(ks[5], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def spec_mamba1(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    return {
+        "in_proj": (fsdp, MODEL),
+        "conv_w": (MODEL, None), "conv_b": (MODEL,),
+        "x_proj": (MODEL, None),
+        "dt_proj": (None, MODEL), "dt_bias": (MODEL,),
+        "a_log": (MODEL, None), "d_skip": (MODEL,),
+        "out_proj": (MODEL, fsdp),
+    }
+
+
+def _mamba1_core(p, xz, cfg: ArchConfig, impl: str):
+    """xz: (B, T, 2*di) post in_proj -> y (B, T, di) pre out_proj."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x = _causal_conv(x, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x.astype(F32)).astype(x.dtype)
+    proj = jnp.einsum("btc,cr->btr", x, p["x_proj"],
+                      preferred_element_type=F32)
+    dt, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rc->btc", dt, p["dt_proj"].astype(F32))
+        + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"])                                   # (di, n)
+    y = scan_ops.selective_scan(x, dt.astype(x.dtype), a,
+                                b.astype(x.dtype), c.astype(x.dtype),
+                                impl=impl)
+    y = y + x * p["d_skip"].astype(x.dtype)
+    return y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+
+
+def mamba1(p, x: jax.Array, cfg: ArchConfig, *, impl: str = "xla") -> jax.Array:
+    """x: (B, T, D) -> (B, T, D)."""
+    xz = jnp.einsum("btd,dc->btc", x, p["in_proj"],
+                    preferred_element_type=F32).astype(x.dtype)
+    xz = constrain(xz, BATCH, None, MODEL)
+    y = _mamba1_core(p, xz, cfg, impl)
+    out = jnp.einsum("btc,cd->btd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return constrain(out, BATCH, None, None)
+
+
+def mamba1_init_state(cfg: ArchConfig, batch: int, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), F32),
+    }
+
+
+def mamba1_state_spec(cfg: ArchConfig):
+    return {"conv": (BATCH, None, MODEL), "ssm": (BATCH, MODEL, None)}
+
+
+def mamba1_decode(p, state: dict, x_t: jax.Array, cfg: ArchConfig):
+    """x_t: (B, D) one token -> (y_t, new_state)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    r = dt_rank(cfg)
+    xz = jnp.einsum("bd,dc->bc", x_t, p["in_proj"],
+                    preferred_element_type=F32).astype(x_t.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _conv_step(x, state["conv"], p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x.astype(F32)).astype(x_t.dtype)
+    proj = jnp.einsum("bc,cr->br", x, p["x_proj"], preferred_element_type=F32)
+    dt, b, c = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rc->bc", dt.astype(x_t.dtype), p["dt_proj"],
+                   preferred_element_type=F32)
+        + p["dt_bias"].astype(F32))                           # (B, di)
+    a = -jnp.exp(p["a_log"])                                   # (di, n)
+    decay = jnp.exp(dt[..., None] * a[None])                   # (B, di, n)
+    h = decay * state["ssm"] + (dt * x.astype(F32))[..., None] * b[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, c)
+    y = y + x.astype(F32) * p["d_skip"].astype(F32)
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x_t.dtype)
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"],
+                     preferred_element_type=F32).astype(x_t.dtype)
+    return out, {"conv": conv_state, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) — chunked scan, one scalar A per head.
+# ---------------------------------------------------------------------------
+
+def m2_heads(cfg: ArchConfig) -> int:
+    if cfg.ssm_heads:
+        return cfg.ssm_heads
+    return cfg.d_inner // cfg.ssm_state      # head_dim == ssm_state default
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    h = m2_heads(cfg)
+    ks = random.split(key, 4)
+    conv_dim = di + 2 * n                       # conv over (x, B, C)
+    return {
+        "in_proj": random.normal(
+            ks[0], (d, 2 * di + 2 * n + h), dtype) * d ** -0.5,
+        "conv_w": random.normal(ks[1], (conv_dim, k), dtype) * k ** -0.5,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(random.uniform(ks[2], (h,), F32) * 15 + 1),
+        "dt_bias": jnp.zeros((h,), F32),
+        "d_skip": jnp.ones((h,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": random.normal(ks[3], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def spec_mamba2(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    return {
+        "in_proj": (fsdp, MODEL),
+        "conv_w": (MODEL, None), "conv_b": (MODEL,),
+        "a_log": (MODEL,), "dt_bias": (MODEL,), "d_skip": (MODEL,),
+        "norm_scale": (MODEL,),
+        "out_proj": (MODEL, fsdp),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., q) -> (..., q, q) lower-tri pairwise sums s[i,j]=sum(j<k<=i)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int = 128):
+    """SSD forward.
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,) (negative);
+    b, c: (B, L, N) (single group, broadcast across heads).
+    Returns y: (B, L, H, P).
+
+    Every (…, H, …) intermediate carries an explicit head->model sharding
+    constraint: GSPMD drops the head sharding through the chunking reshapes
+    otherwise, replicating multi-GiB decay masks on every chip.
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+    xc = x.reshape(bsz, nc, q, h, p).astype(F32)
+    xc = constrain(xc, BATCH, None, None, MODEL, None)
+    dtc = dt.reshape(bsz, nc, q, h).astype(F32)
+    dtc = constrain(dtc, BATCH, None, None, MODEL)
+    bc = b.reshape(bsz, nc, q, n).astype(F32)
+    cc = c.reshape(bsz, nc, q, n).astype(F32)
+    abar = dtc * a[None, None, None, :]                     # (B,nc,q,H)
+
+    # checkpointed intra-chunk work: the (B,nc,H,q,q) decay mask and the
+    # score block are recomputed in backward rather than saved.
+    @jax.checkpoint
+    def intra_chunk(abar, cc, bc, dtc, xc):
+        lmask = jnp.exp(_segsum(abar.transpose(0, 1, 3, 2)))  # (B,nc,H,q,q)
+        lmask = constrain(lmask, BATCH, None, MODEL, None, None)
+        scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)        # (B,nc,q,q)
+        masked = jnp.einsum("bcqk,bchqk->bchqk", scores, lmask)
+        masked = constrain(masked, BATCH, None, MODEL, None, None)
+        return jnp.einsum("bchqk,bckh,bckhp->bcqhp", masked, dtc, xc)
+
+    y_diag = intra_chunk(abar, cc, bc, dtc, xc)
+    y_diag = constrain(y_diag, BATCH, None, None, MODEL, None)
+
+    # 2. chunk states: S_c = sum_k decay_out[k] * dt_k * B_k ⊗ x_k
+    a_cum = jnp.cumsum(abar, axis=2)                        # (B,nc,q,H)
+    a_tot = a_cum[:, :, -1:, :]                             # (B,nc,1,H)
+    decay_out = jnp.exp(a_tot - a_cum)                      # (B,nc,q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                        bc, decay_out * dtc, xc)            # (B,nc,H,N,P)
+    states = constrain(states, BATCH, None, MODEL, None, None)
+
+    # 3. inter-chunk recurrence over nc: S'_{c} = G_c S'_{c-1} + S_c
+    gdec = jnp.exp(a_tot[:, :, 0, :])                       # (B,nc,H)
+
+    def combine(p1, p2):
+        (g1, s1), (g2, s2) = p1, p2
+        return g1 * g2, g2[..., None, None] * s1 + s2
+
+    _, s_run = jax.lax.associative_scan(combine, (gdec, states), axis=1)
+    s_prev = jnp.concatenate(
+        [jnp.zeros_like(s_run[:, :1]), s_run[:, :-1]], axis=1)
+    s_prev = constrain(s_prev, BATCH, None, MODEL, None, None)
+
+    # 4. inter-chunk contribution
+    decay_in = jnp.exp(a_cum)                               # (B,nc,q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cc, decay_in, s_prev)
+
+    y = (y_diag + y_off).reshape(bsz, nc * q, h, p)[:, :l]
+    return y.astype(x.dtype), s_run[:, -1]                  # final state
+
+
+def mamba2(p, x: jax.Array, cfg: ArchConfig, *, chunk: int = 128) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = m2_heads(cfg)
+    hp = di // h
+    proj = jnp.einsum("btd,dc->btc", x, p["in_proj"],
+                      preferred_element_type=F32).astype(x.dtype)
+    proj = constrain(proj, BATCH, None, MODEL)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x.dtype)
+    xs, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"])
+    # heads shard over model; re-assert after the channel->(H,P) reshape
+    # (sharding can be dropped through reshapes, exploding SSD intermediates)
+    xh = constrain(xs.reshape(*xs.shape[:2], h, hp), BATCH, None, MODEL, None)
+    dt = constrain(dt, BATCH, None, MODEL)
+    y, _ = ssd_chunked(xh, dt, a, b, c, chunk=chunk)
+    y = constrain(y, BATCH, None, MODEL, None)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*xs.shape[:2], di)
+    # gated RMSNorm (mamba2)
+    yf = y.astype(F32) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"].astype(F32)
+    out = jnp.einsum("btc,cd->btd", yf.astype(x.dtype), p["out_proj"],
+                     preferred_element_type=F32).astype(x.dtype)
+    return constrain(out, BATCH, None, None)
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int, dtype):
+    h = m2_heads(cfg)
+    hp = cfg.d_inner // h
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, cfg.ssm_state, hp), F32),
+    }
+
+
+def mamba2_state_spec(cfg: ArchConfig):
+    return {"conv": (BATCH, None, MODEL), "ssm": (BATCH, MODEL, None, None)}
+
+
+def mamba2_decode(p, state: dict, x_t: jax.Array, cfg: ArchConfig):
+    """x_t: (B, D) -> (y_t, new_state)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    h = m2_heads(cfg)
+    hp = di // h
+    proj = jnp.einsum("bd,dc->bc", x_t, p["in_proj"],
+                      preferred_element_type=F32).astype(x_t.dtype)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    xbc, conv_state = _conv_step(xbc, state["conv"], p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(F32)).astype(x_t.dtype)
+    xs, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])                          # (B,H)
+    xh = xs.reshape(-1, h, hp).astype(F32)
+    ssm = decay[..., None, None] * state["ssm"] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, b.astype(F32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(F32), ssm)
+    y = y + xh * p["d_skip"].astype(F32)[None, :, None]
+    y = y.reshape(-1, di)
+    yf = y * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"].astype(F32)
+    out = jnp.einsum("bc,cd->bd", yf.astype(x_t.dtype), p["out_proj"],
+                     preferred_element_type=F32).astype(x_t.dtype)
+    return out, {"conv": conv_state, "ssm": ssm}

@@ -1,0 +1,193 @@
+"""Unified model API over all architecture families.
+
+The runtime (train/serve/dryrun) only talks to this module:
+
+    init_params(rng, cfg)              -> params pytree
+    param_specs(cfg)                   -> PartitionSpec pytree (logical axes)
+    train_logits(params, batch, cfg)   -> (logits, aux_loss)
+    loss_fn(params, batch, cfg)        -> scalar loss
+    init_cache / cache_specs           -> decode-state pytree
+    decode_step(params, cache, tokens) -> (logits, new_cache)
+    batch_struct(cfg, shape)           -> ShapeDtypeStruct batch (dry-run)
+    batch_specs(cfg)                   -> PartitionSpec pytree for the batch
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.meshctx import BATCH
+from repro.models import encdec, transformer
+
+F32 = jnp.float32
+
+
+def is_encdec(cfg: ArchConfig) -> bool:
+    return cfg.encoder_layers > 0
+
+
+def init_params(rng, cfg: ArchConfig, dtype=jnp.bfloat16):
+    if is_encdec(cfg):
+        return encdec.init_params(rng, cfg, dtype)
+    return transformer.init_params(rng, cfg, dtype)
+
+
+def param_specs(cfg: ArchConfig):
+    if is_encdec(cfg):
+        return encdec.param_specs(cfg)
+    return transformer.param_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# training forward + loss
+# ---------------------------------------------------------------------------
+
+def train_logits(params, batch: dict, cfg: ArchConfig, *, impl: str = "xla"):
+    if is_encdec(cfg):
+        return encdec.forward_train(params, batch["frames"], batch["tokens"],
+                                    cfg, impl=impl)
+    if cfg.frontend != "none":
+        return transformer.logits_from_embeds(params, batch["embeds"], cfg,
+                                              impl=impl)
+    return transformer.logits_from_tokens(params, batch["tokens"], cfg,
+                                          impl=impl)
+
+
+def train_hidden(params, batch: dict, cfg: ArchConfig, *, impl: str = "xla"):
+    """Final hidden states (B, S, D) — unembedding is done chunk-wise in the
+    loss so the (B, S, V) f32 logits never materialize in full."""
+    if is_encdec(cfg):
+        return encdec.forward_train(params, batch["frames"], batch["tokens"],
+                                    cfg, impl=impl, return_hidden=True)
+    if cfg.frontend != "none":
+        x = batch["embeds"]
+    else:
+        from repro.models import layers as L
+        x = L.embed(params["embed"], batch["tokens"], cfg)
+    return transformer.forward(params, x, cfg, impl=impl)
+
+
+def _ce_chunk(embed_params, h_c, l_c, cfg: ArchConfig):
+    """Cross-entropy on one sequence chunk (checkpointed)."""
+    from repro.models import layers as L
+    logits = L.unembed(embed_params, h_c, cfg).astype(F32)
+    v = cfg.padded_vocab
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.clip(l_c, 0, v - 1)[..., None], axis=-1)[..., 0]
+    mask = (l_c >= 0).astype(F32)
+    return ((logz - gold) * mask).sum(), mask.sum()
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, *, impl: str = "xla",
+            ce_chunk: int = 512):
+    hidden, aux = train_hidden(params, batch, cfg, impl=impl)
+    labels = batch["labels"]
+    b, s, d = hidden.shape
+    chunk = min(ce_chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+    h_c = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    l_c = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+    ce = jax.checkpoint(
+        lambda hc, lc: _ce_chunk(params["embed"], hc, lc, cfg))
+
+    def body(carry, xs):
+        nll, cnt = carry
+        hc, lc = xs
+        n, c = ce(hc, lc)
+        return (nll + n, cnt + c), None
+
+    (nll, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32),
+                                        jnp.zeros((), F32)), (h_c, l_c))
+    loss = nll / jnp.maximum(cnt, 1.0)
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, max_seq, dtype)
+    return transformer.init_cache(cfg, batch, max_seq, dtype)
+
+
+def cache_specs(cfg: ArchConfig):
+    if is_encdec(cfg):
+        return encdec.cache_specs(cfg)
+    return transformer.cache_specs(cfg)
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ArchConfig):
+    if is_encdec(cfg):
+        return encdec.decode_step(params, cache, tokens, cfg)
+    return transformer.decode_step(params, cache, tokens, cfg)
+
+
+# ---------------------------------------------------------------------------
+# dry-run input structures (ShapeDtypeStruct — never allocated)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig,
+                 dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((b,), jnp.int32)}
+    if is_encdec(cfg):
+        return {"frames": sds((b, encdec.ENC_FRAMES, cfg.d_model), dtype),
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    if cfg.frontend != "none":
+        return {"embeds": sds((b, s, cfg.d_model), dtype),
+                "labels": sds((b, s), jnp.int32)}
+    return {"tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32)}
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "decode":
+        return {"tokens": (BATCH,)}
+    if is_encdec(cfg):
+        return {"frames": (BATCH, None, None), "tokens": (BATCH, None),
+                "labels": (BATCH, None)}
+    if cfg.frontend != "none":
+        return {"embeds": (BATCH, None, None), "labels": (BATCH, None)}
+    return {"tokens": (BATCH, None), "labels": (BATCH, None)}
+
+
+def make_host_batch(cfg: ArchConfig, batch: int, seq: int, rng=None,
+                    dtype=jnp.float32) -> dict:
+    """Small concrete batch for CPU smoke tests."""
+    import numpy as np
+    r = np.random.default_rng(0 if rng is None else rng)
+    if is_encdec(cfg):
+        return {
+            "frames": jnp.asarray(
+                r.standard_normal((batch, 8, cfg.d_model)), dtype),
+            "tokens": jnp.asarray(
+                r.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+            "labels": jnp.asarray(
+                r.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.frontend != "none":
+        return {
+            "embeds": jnp.asarray(
+                r.standard_normal((batch, seq, cfg.d_model)), dtype),
+            "labels": jnp.asarray(
+                r.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    return {
+        "tokens": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(
+            r.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: top-k routing, grouped capacity dispatch, EP.
+
+TPU/SPMD layout (MaxText-style "dropping" implementation):
+* tokens are reshaped to (G groups, group_size); capacity per expert is
+  C = ceil(group_size * top_k * capacity_factor / E) within each group, so the
+  dispatch/combine tensors are (G, gs, E, C) — total elements
+  tokens * gs * top_k * cf, independent of E, tunable via group size.
+* experts weights (E, D, F) are sharded E -> model (expert parallelism);
+  dispatch groups G -> batch axes.  The combine einsum contracts the expert
+  axis, producing one model-axis all-reduce per MoE layer — the EP collective.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ArchConfig
+from repro.distributed.meshctx import BATCH, MODEL, constrain
+
+F32 = jnp.float32
+
+
+def capacity(cfg: ArchConfig) -> int:
+    gs = cfg.moe_group_size
+    c = int(gs * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(c, 1)
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = random.split(key, 4)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {
+        "router": random.normal(ks[0], (d, e), F32) * d ** -0.5,
+        "w_in": random.normal(ks[1], (e, d, f), dtype) * d ** -0.5,
+        "w_out": random.normal(ks[2], (e, f, d), dtype) * f ** -0.5,
+    }
+    if gated:
+        p["w_gate"] = random.normal(ks[3], (e, d, f), dtype) * d ** -0.5
+    return p
+
+
+def spec_moe(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {
+        "router": (None, None),
+        "w_in": (MODEL, fsdp, None),
+        "w_out": (MODEL, None, fsdp),
+    }
+    if gated:
+        p["w_gate"] = (MODEL, fsdp, None)
+    return p
+
+
+def moe(p, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss). Dropping tokens beyond capacity."""
+    b, s, d = x.shape
+    e, k, c = cfg.n_experts, cfg.top_k, capacity(cfg)
+    gs = min(cfg.moe_group_size, b * s)
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    pad = (-n) % gs
+    tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    g = tokens.shape[0] // gs
+    xt = tokens.reshape(g, gs, d)
+    xt = constrain(xt, BATCH, None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(F32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (g, gs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), F32).at[gate_idx.reshape(-1)].add(
+        jnp.ones_like(gate_idx.reshape(-1), F32)) / (g * gs * k)
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=F32)           # (g, gs, k, e)
+    flatoh = onehot.reshape(g, gs * k, e)
+    pos = jnp.cumsum(flatoh, axis=1) * flatoh - 1.0           # (g, gs*k, e)
+    pos = pos.reshape(g, gs, k, e)
+    in_cap = (pos >= 0) & (pos < c)
+    pos_cap = jnp.clip(pos, 0, c - 1)
+    # dispatch (g, gs, e, c) and combine (weighted) tensors
+    cap_oh = jax.nn.one_hot(pos_cap, c, dtype=F32) * in_cap[..., None]
+    disp = jnp.einsum("gske,gskec->gsec", onehot, cap_oh)
+    comb = jnp.einsum("gske,gskec,gsk->gsec", onehot, cap_oh, gate_vals)
+    disp = constrain(disp, BATCH, None, MODEL, None)
+    comb = constrain(comb, BATCH, None, MODEL, None)
+
+    xin = jnp.einsum("gsec,gsd->gecd", disp, xt.astype(F32))  # (g, e, c, d)
+    xin = constrain(xin.astype(x.dtype), BATCH, MODEL, None, None)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["w_in"],
+                   preferred_element_type=F32)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        gate = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"],
+                          preferred_element_type=F32)
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(gate) * h
+    elif cfg.mlp_type == "sq_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    out_e = jnp.einsum("gecf,efd->gecd", h.astype(x.dtype), p["w_out"],
+                       preferred_element_type=F32)            # (g, e, c, d)
+    out = jnp.einsum("gsec,gecd->gsd", comb, out_e)           # AR over model
+    out = constrain(out.astype(x.dtype), BATCH, None, None)
+    out = out.reshape(-1, d)[:n].reshape(b, s, d)
+    return out, aux

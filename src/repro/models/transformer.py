@@ -1,0 +1,298 @@
+"""Decoder-only model assembly: dense, MoE, SSM and hybrid stacks.
+
+* Layers are stacked (leading layer axis) and iterated with ``lax.scan`` so
+  the HLO contains one layer body regardless of depth — essential for
+  compiling 96-layer × 18k-width configs in the dry-run.
+* ``remat='block'`` wraps the scanned body in ``jax.checkpoint`` (full-block
+  policy) for activation-memory control at train shapes.
+* Hybrid (zamba2): a single *shared* attention+MLP block (one set of weights)
+  is applied every ``attn_every`` Mamba-2 layers, each application site with
+  its own KV cache at decode time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ArchConfig
+from repro.distributed.meshctx import BATCH, MODEL, constrain
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/spec
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, dtype) -> dict:
+    """One decoder block (attention | mamba | + mlp/moe per family)."""
+    ks = random.split(key, 4)
+    if cfg.family == "ssm":
+        return {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+                "mixer": M.init_mamba1(ks[0], cfg, dtype)}
+    if cfg.family == "hybrid":
+        return {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+                "mixer": M.init_mamba2(ks[0], cfg, dtype)}
+    p = {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+         "attn": L.init_attention(ks[0], cfg, dtype),
+         "ln2": L.init_rmsnorm(cfg.d_model, dtype)}
+    if cfg.n_experts:
+        p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg, dtype)
+    return p
+
+
+def _spec_block(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    if cfg.family == "ssm":
+        return {"ln1": L.spec_rmsnorm(), "mixer": M.spec_mamba1(cfg, fsdp)}
+    if cfg.family == "hybrid":
+        return {"ln1": L.spec_rmsnorm(), "mixer": M.spec_mamba2(cfg, fsdp)}
+    p = {"ln1": L.spec_rmsnorm(), "attn": L.spec_attention(cfg, fsdp),
+         "ln2": L.spec_rmsnorm()}
+    if cfg.n_experts:
+        p["moe"] = MOE.spec_moe(cfg, fsdp)
+    else:
+        p["mlp"] = L.spec_mlp(cfg, fsdp)
+    return p
+
+
+def _init_shared_attn(key, cfg: ArchConfig, dtype) -> dict:
+    ks = random.split(key, 2)
+    return {"ln1": L.init_rmsnorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(ks[1], cfg, dtype)}
+
+
+def _spec_shared_attn(cfg: ArchConfig, fsdp: Optional[str]) -> dict:
+    return {"ln1": L.spec_rmsnorm(), "attn": L.spec_attention(cfg, fsdp),
+            "ln2": L.spec_rmsnorm(), "mlp": L.spec_mlp(cfg, fsdp)}
+
+
+# ---------------------------------------------------------------------------
+# model init / specs
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> dict:
+    ke, kl, ks = random.split(key, 3)
+    lkeys = random.split(kl, cfg.n_layers)
+    p = {
+        "embed": L.init_embed(ke, cfg, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(lkeys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.family == "hybrid":
+        p["shared"] = _init_shared_attn(ks, cfg, dtype)
+    return p
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    fsdp = "data" if cfg.fsdp else None
+    block = _spec_block(cfg, fsdp)
+    stacked = jax.tree_util.tree_map(
+        lambda s: (None,) + tuple(s), block,
+        is_leaf=lambda s: isinstance(s, tuple))
+    p = {
+        "embed": L.spec_embed(cfg, fsdp),
+        "blocks": stacked,
+        "final_norm": L.spec_rmsnorm(),
+    }
+    if cfg.family == "hybrid":
+        p["shared"] = _spec_shared_attn(cfg, fsdp)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_fwd(lp, x, cfg: ArchConfig, impl: str):
+    # Megatron-style sequence parallelism on the residual stream: norms and
+    # residual adds run seq-sharded over `model`; attention/MLP internals
+    # re-shard as needed (all-gather / reduce-scatter inserted by SPMD).
+    # SSM/hybrid mixers consume the full sequence (recurrent scan), so their
+    # residual stays seq-replicated — seq-sharding would buy nothing and cost
+    # an all-gather + reduce-scatter per layer.
+    if x.shape[1] > 1 and cfg.family not in ("ssm", "hybrid"):
+        x = constrain(x, BATCH, MODEL, None)
+    if cfg.family in ("ssm", "hybrid"):
+        mixer = M.mamba1 if cfg.family == "ssm" else M.mamba2
+        return x + mixer(lp["mixer"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                         cfg), jnp.zeros((), F32)
+    h = x + L.attention(lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps),
+                        cfg, impl=impl)
+    z = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    if cfg.n_experts:
+        out, aux = MOE.moe(lp["moe"], z, cfg)
+    else:
+        out, aux = L.mlp(lp["mlp"], z, cfg), jnp.zeros((), F32)
+    return h + out, aux
+
+
+def _shared_fwd(sp, x, cfg: ArchConfig, impl: str):
+    h = x + L.attention(sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                        cfg, impl=impl)
+    return h + L.mlp(sp["mlp"], L.rmsnorm(sp["ln2"], h, cfg.norm_eps), cfg)
+
+
+def forward(params, x: jax.Array, cfg: ArchConfig, *,
+            impl: str = "xla") -> tuple[jax.Array, jax.Array]:
+    """Hidden-states forward. x: (B, S, D) -> (hidden (B,S,D), aux_loss)."""
+
+    def body(carry, scanned):
+        h, aux, i = carry
+        lp = scanned
+        if cfg.family == "hybrid":
+            h = jax.lax.cond(
+                i % cfg.attn_every == 0,
+                lambda v: _shared_fwd(params["shared"], v, cfg, impl),
+                lambda v: v, h)
+        h, a = _block_fwd(lp, h, cfg, impl)
+        return (h, aux + a, i + 1), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+
+    (x, aux, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), F32), jnp.asarray(0, jnp.int32)),
+        params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def logits_from_tokens(params, tokens: jax.Array, cfg: ArchConfig, *,
+                       impl: str = "xla"):
+    x = L.embed(params["embed"], tokens, cfg)
+    h, aux = forward(params, x, cfg, impl=impl)
+    return L.unembed(params["embed"], h, cfg), aux
+
+
+def logits_from_embeds(params, embeds: jax.Array, cfg: ArchConfig, *,
+                       impl: str = "xla"):
+    """Frontend-stub path ([vlm]/[audio]): precomputed patch/frame embeds."""
+    h, aux = forward(params, embeds, cfg, impl=impl)
+    return L.unembed(params["embed"], h, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def n_shared_sites(cfg: ArchConfig) -> int:
+    if cfg.family != "hybrid":
+        return 0
+    return -(-cfg.n_layers // cfg.attn_every)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Stacked per-layer decode state."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        state = jax.vmap(lambda _: M.mamba1_init_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+        return {"ssm": state, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        state = jax.vmap(lambda _: M.mamba2_init_state(cfg, batch, dtype))(
+            jnp.arange(cfg.n_layers))
+        sites = n_shared_sites(cfg)
+        return {"ssm": state,
+                "k": jnp.zeros((sites, batch, max_seq, kv, hd), dtype),
+                "v": jnp.zeros((sites, batch, max_seq, kv, hd), dtype),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, kv, hd), dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig):
+    kvspec = (None,) + L.cache_spec(cfg)
+    if cfg.family == "ssm":
+        st = jax.tree_util.tree_map(
+            lambda s: (None,) + tuple(s), M.mamba1_state_spec(cfg),
+            is_leaf=lambda s: isinstance(s, tuple))
+        return {"ssm": st, "pos": ()}
+    if cfg.family == "hybrid":
+        st = jax.tree_util.tree_map(
+            lambda s: (None,) + tuple(s), M.mamba2_state_spec(cfg),
+            is_leaf=lambda s: isinstance(s, tuple))
+        return {"ssm": st, "k": kvspec, "v": kvspec, "pos": ()}
+    return {"k": kvspec, "v": kvspec, "pos": ()}
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ArchConfig):
+    """tokens: (B,) -> (logits (B, V), new_cache)."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], tokens[:, None], cfg)     # (B, 1, D)
+
+    if cfg.family == "ssm":
+        def body(h, scanned):
+            lp, st = scanned
+            y, st2 = M.mamba1_decode(lp["mixer"],
+                                     st, L.rmsnorm(lp["ln1"], h, cfg.norm_eps)[:, 0],
+                                     cfg)
+            return h + y[:, None, :], st2
+        h, new_state = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_state, "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        def body(carry, scanned):
+            h, k_all, v_all, i = carry
+            lp, st = scanned
+
+            def with_attn(h):
+                site = i // cfg.attn_every
+                ck = jax.lax.dynamic_index_in_dim(k_all, site, 0, False)
+                cv = jax.lax.dynamic_index_in_dim(v_all, site, 0, False)
+                y, ck, cv = L.attention_decode(
+                    params["shared"]["attn"],
+                    L.rmsnorm(params["shared"]["ln1"], h, cfg.norm_eps),
+                    ck, cv, pos, cfg)
+                h = h + y
+                h = h + L.mlp(params["shared"]["mlp"],
+                              L.rmsnorm(params["shared"]["ln2"], h,
+                                        cfg.norm_eps), cfg)
+                return (h,
+                        jax.lax.dynamic_update_index_in_dim(k_all, ck, site, 0),
+                        jax.lax.dynamic_update_index_in_dim(v_all, cv, site, 0))
+
+            h, k_all, v_all = jax.lax.cond(
+                i % cfg.attn_every == 0, with_attn,
+                lambda h_: (h_, k_all, v_all), h)
+            y, st2 = M.mamba2_decode(lp["mixer"],
+                                     st,
+                                     L.rmsnorm(lp["ln1"], h, cfg.norm_eps)[:, 0],
+                                     cfg)
+            return (h + y[:, None, :], k_all, v_all, i + 1), st2
+
+        (h, k_all, v_all, _), new_state = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.asarray(0, jnp.int32)),
+            (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_state, "k": k_all, "v": v_all, "pos": pos + 1}
+    else:
+        def body(h, scanned):
+            lp, ck, cv = scanned
+            y, ck, cv = L.attention_decode(
+                lp["attn"], L.rmsnorm(lp["ln1"], h, cfg.norm_eps), ck, cv,
+                pos, cfg)
+            h = h + y
+            z = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
+            if cfg.n_experts:
+                out, _ = MOE.moe(lp["moe"], z, cfg)
+            else:
+                out = L.mlp(lp["mlp"], z, cfg)
+            return h + out, (ck, cv)
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new, "pos": pos + 1}
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h, cfg)[:, 0]
+    return logits, new_cache

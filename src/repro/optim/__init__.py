@@ -1,0 +1,1 @@
+"""AdamW with bf16/int8 optimizer-state compression."""

@@ -1,0 +1,157 @@
+"""AdamW with global-norm clipping, warmup+cosine schedule and
+optimizer-state compression.
+
+Distributed notes:
+* m/v inherit the parameter sharding (FSDP/TP), so ZeRO-1 partitioning of
+  optimizer state is automatic under jit.
+* ``state_dtype='bfloat16'`` halves optimizer-state HBM; ``'int8'`` stores
+  m/v as block-quantized int8 (absmax per 128-element block, f32 scales —
+  ~1.03 bytes/param/moment).  int8 is what fits the 775B llama4-maverick
+  config in 16 GB/chip on a single 256-chip pod (EXPERIMENTS.md §Dry-run).
+  Math is always f32; storage is quantized on write.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"       # float32 | bfloat16 | int8
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+# -- block-quantized moment storage -----------------------------------------
+
+def _padded(n: int) -> int:
+    return -(-n // QBLOCK) * QBLOCK
+
+
+def _quant_init(p) -> dict:
+    last = _padded(p.shape[-1]) if p.ndim else QBLOCK
+    lead = p.shape[:-1] if p.ndim else ()
+    return {"q": jnp.zeros(lead + (last,), jnp.int8),
+            "scale": jnp.zeros(lead + (last // QBLOCK,), F32)}
+
+
+def _dequant(qt: dict, shape) -> jax.Array:
+    q = qt["q"].astype(F32)
+    lead = q.shape[:-1]
+    nb = q.shape[-1] // QBLOCK
+    x = q.reshape(lead + (nb, QBLOCK)) * qt["scale"][..., None]
+    x = x.reshape(lead + (nb * QBLOCK,))
+    if not shape:
+        return x[..., 0]
+    return x[..., : shape[-1]]
+
+
+def _quant(x: jax.Array) -> dict:
+    if x.ndim == 0:
+        x = x[None]
+    pad = _padded(x.shape[-1]) - x.shape[-1]
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    lead = x.shape[:-1]
+    nb = x.shape[-1] // QBLOCK
+    xb = x.reshape(lead + (nb, QBLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-12)[..., None])
+    return {"q": q.reshape(lead + (nb * QBLOCK,)).astype(jnp.int8),
+            "scale": scale}
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    if cfg.state_dtype == "int8":
+        mk = lambda p: _quant_init(p)
+    else:
+        dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else F32
+        mk = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(m=jax.tree_util.tree_map(mk, params),
+                    v=jax.tree_util.tree_map(mk, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def opt_state_specs(param_specs, cfg: AdamWConfig, is_spec):
+    """Spec tree mirroring init()'s structure (int8 adds q/scale leaves)."""
+    if cfg.state_dtype != "int8":
+        return param_specs
+
+    def one(spec):
+        spec = tuple(spec)
+        scale_spec = spec[:-1] + (None,) if spec else (None,)
+        return {"q": spec if spec else (None,), "scale": scale_spec}
+
+    return jax.tree_util.tree_map(one, param_specs, is_leaf=is_spec)
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    warm = jnp.minimum(step.astype(F32) / max(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step.astype(F32) - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(step, cfg)
+    bc1 = 1 - cfg.b1 ** step.astype(F32)
+    bc2 = 1 - cfg.b2 ** step.astype(F32)
+    quantized = cfg.state_dtype == "int8"
+    state_dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else F32
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        mf = (_dequant(m, p.shape) if quantized else m.astype(F32))
+        vf = (_dequant(v, p.shape) if quantized else v.astype(F32))
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * delta).astype(p.dtype)
+        if quantized:
+            return new_p, _quant(mf), _quant(vf)
+        return new_p, mf.astype(state_dt), vf.astype(state_dt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    flat_m = jax.tree_util.tree_leaves(state.m, is_leaf=is_q)
+    flat_v = jax.tree_util.tree_leaves(state.v, is_leaf=is_q)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"grad_norm": gnorm, "lr": lr}

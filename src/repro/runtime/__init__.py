@@ -1,0 +1,1 @@
+"""Jitted train/serve step builders with explicit shardings."""

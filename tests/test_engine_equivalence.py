@@ -1,0 +1,170 @@
+"""Property tests: Block-STM wave engine ≡ sequential execution.
+
+This is the paper's central safety theorem (Appendix A, Lemma 1/Theorem 1):
+for any block and any scheduling, the committed state equals the state of
+executing transactions sequentially in the preset order.  We drive the engine
+across randomized workloads, window sizes and backends with hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import workloads as W
+from repro.core.engine import make_executor, run_block
+from repro.core.vm import run_sequential
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _check_p2p(n_accounts, n_txns, window, seed, backend="sorted",
+               cfg_reads=4):
+    spec = W.P2PSpec(n_accounts=n_accounts, cfg_reads=cfg_reads)
+    params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
+    cfg = W.p2p_engine_config(spec, n_txns, window=window, backend=backend)
+    res = run_block(W.p2p_program(spec), params, storage, cfg)
+    assert bool(res.committed), "engine hit wave cap without committing"
+    expected = run_sequential(W.p2p_program(spec), params, storage, n_txns)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+    return res
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_accounts=st.sampled_from([2, 3, 10, 50]),
+    n_txns=st.integers(4, 48),
+    window=st.sampled_from([1, 2, 7, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_p2p_equivalence(n_accounts, n_txns, window, seed):
+    _check_p2p(n_accounts, n_txns, window, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_slots=st.integers(2, 20),
+    n_txns=st.integers(4, 40),
+    window=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**16),
+    repoint=st.floats(0.0, 1.0),
+)
+def test_indirect_equivalence(n_slots, n_txns, window, seed, repoint):
+    """Dynamic read sets (pointer chasing): locations discovered mid-execution."""
+    spec = W.IndirectSpec(n_slots=n_slots)
+    params, storage = W.make_indirect_block(spec, n_txns, seed=seed,
+                                            repoint_prob=repoint)
+    cfg = W.indirect_engine_config(spec, n_txns, window=window)
+    res = run_block(W.indirect_program(spec), params, storage, cfg)
+    assert bool(res.committed)
+    expected = run_sequential(W.indirect_program(spec), params, storage,
+                              n_txns)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_txns=st.integers(4, 40),
+    window=st.sampled_from([1, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_admission_equivalence(n_txns, window, seed):
+    """Hot shared counter (free-list head): worst-case conflict chain."""
+    spec = W.AdmissionSpec(n_tenants=3, n_groups=8, total_pages=n_txns * 3,
+                           quota_per_tenant=n_txns)
+    params, storage = W.make_admission_block(spec, n_txns, seed=seed)
+    cfg = W.admission_engine_config(spec, n_txns, window=window)
+    res = run_block(W.admission_program(spec), params, storage, cfg)
+    assert bool(res.committed)
+    expected = run_sequential(W.admission_program(spec), params, storage,
+                              n_txns)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+
+
+def test_dense_backend_equivalence():
+    for seed in range(3):
+        _check_p2p(10, 32, 8, seed, backend="dense")
+
+
+def test_dense_pallas_backend():
+    spec = W.P2PSpec(n_accounts=10)
+    params, storage = W.make_p2p_block(spec, 24, seed=0)
+    cfg = W.p2p_engine_config(spec, 24, window=8, backend="dense",
+                              use_pallas=True)
+    res = run_block(W.p2p_program(spec), params, storage, cfg)
+    assert bool(res.committed)
+    expected = run_sequential(W.p2p_program(spec), params, storage, 24)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+
+
+def test_determinism_across_windows():
+    """Paper: every execution of the block yields the same outcome —
+    regardless of the parallelism (window size / thread count)."""
+    snaps = []
+    for window in (1, 3, 8, 64):
+        res = _check_p2p(5, 40, window, seed=7)
+        snaps.append(np.asarray(res.snapshot))
+    for s in snaps[1:]:
+        np.testing.assert_array_equal(snaps[0], s)
+
+
+def test_fully_sequential_workload_overhead():
+    """2 accounts => every txn conflicts with the previous one (paper §4.1).
+    The engine must degrade gracefully: ~1 commit per wave, bounded
+    re-execution."""
+    spec = W.P2PSpec(n_accounts=2)
+    params, storage = W.make_p2p_block(spec, 48, seed=3)
+    cfg = W.p2p_engine_config(spec, 48, window=8)
+    res = run_block(W.p2p_program(spec), params, storage, cfg)
+    assert bool(res.committed)
+    # incarnations bounded: at most ~2 executions per txn + window slack
+    assert int(res.execs) < 3 * 48, int(res.execs)
+
+
+def test_low_contention_near_optimal():
+    """Many accounts => most txns commit with exactly one incarnation."""
+    spec = W.P2PSpec(n_accounts=2000)
+    params, storage = W.make_p2p_block(spec, 128, seed=11)
+    cfg = W.p2p_engine_config(spec, 128, window=128)
+    res = run_block(W.p2p_program(spec), params, storage, cfg)
+    assert bool(res.committed)
+    assert int(res.execs) <= int(128 * 1.25), int(res.execs)
+    assert int(res.waves) <= 6, int(res.waves)
+
+
+def test_jit_executor_reuse():
+    spec = W.P2PSpec(n_accounts=10)
+    cfg = W.p2p_engine_config(spec, 32, window=8)
+    run = make_executor(W.p2p_program(spec), cfg)
+    for seed in range(3):
+        params, storage = W.make_p2p_block(spec, 32, seed=seed)
+        res = run(params, storage)
+        expected = run_sequential(W.p2p_program(spec), params, storage, 32)
+        np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+
+
+def test_chain_of_blocks():
+    """run_chain: each block's committed state feeds the next block."""
+    from repro.core.engine import run_chain
+    import jax
+
+    spec = W.P2PSpec(n_accounts=20)
+    n_txns, n_blocks = 32, 4
+    cfg = W.p2p_engine_config(spec, n_txns, window=8)
+    blocks = []
+    for b in range(n_blocks):
+        params, storage0 = W.make_p2p_block(spec, n_txns, seed=100 + b)
+        blocks.append(params)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *blocks)
+
+    final, results = jax.jit(
+        lambda bp, st: run_chain(W.p2p_program(spec), bp, st, cfg)
+    )(stacked, storage0)
+    assert bool(np.asarray(results.committed).all())
+
+    # sequential reference over the whole chain
+    state = np.asarray(storage0)
+    for b in range(n_blocks):
+        state = run_sequential(W.p2p_program(spec), blocks[b], state, n_txns)
+    np.testing.assert_array_equal(np.asarray(final), state)

@@ -1,0 +1,202 @@
+"""Substrate tests: checkpoint manager (atomic/async/keep-K/elastic),
+deterministic data pipeline, optimizer, fault-tolerance utilities."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_arch, reduced_config
+from repro.data.pipeline import SyntheticLMStream
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               StragglerMonitor)
+from repro.models import model as MDL
+from repro.optim import adamw
+from repro.runtime import steps as RT
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _small_state():
+    cfg = reduced_config(get_arch("gemma-2b"))
+    opt_cfg = adamw.AdamWConfig()
+    return cfg, opt_cfg, RT.init_train_state(
+        jax.random.PRNGKey(0), cfg, opt_cfg, jnp.float32)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg, opt_cfg, state = _small_state()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, state, extra={"data_step": 11}, blocking=True)
+    restored, meta = mgr.restore(state)
+    assert meta["step"] == 10 and meta["extra"]["data_step"] == 11
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    _, _, state = _small_state()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state, blocking=True)
+    assert mgr.steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_async(tmp_path):
+    _, _, state = _small_state()
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, state)          # async
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_atomicity_no_partial_dirs(tmp_path):
+    _, _, state = _small_state()
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, state, blocking=True)
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names), names
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Save, then restore with explicit (different) shardings: elastic resume."""
+    _, _, state = _small_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state.params, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    shardings = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), state.params)
+    restored, _ = mgr.restore(state.params, shardings=shardings)
+    leaf = jax.tree_util.tree_leaves(restored)[0]
+    assert leaf.sharding == NamedSharding(mesh, P())
+
+
+def test_train_restart_is_bitexact(tmp_path):
+    """Kill/restart mid-run must reproduce the uninterrupted run exactly
+    (checkpoint + deterministic data stream)."""
+    cfg = reduced_config(get_arch("gemma-2b"))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=8, warmup_steps=1)
+
+    def run(n_steps, state, stream):
+        step_fn = jax.jit(RT.make_train_step(cfg, opt_cfg))
+        for _ in range(n_steps):
+            state, _ = step_fn(state, stream.next_batch())
+        return state
+
+    # uninterrupted: 6 steps
+    s0 = RT.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg, jnp.float32)
+    full = run(6, s0, SyntheticLMStream(cfg, 2, 16, seed=0))
+
+    # interrupted at 3 + restart from checkpoint
+    s1 = RT.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg, jnp.float32)
+    stream = SyntheticLMStream(cfg, 2, 16, seed=0)
+    s1 = run(3, s1, stream)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, s1, extra={"data_step": stream.state.step}, blocking=True)
+
+    template = RT.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg,
+                                   jnp.float32)
+    restored, meta = mgr.restore(template)
+    stream2 = SyntheticLMStream(cfg, 2, 16, seed=0,
+                                start_step=meta["extra"]["data_step"])
+    resumed = run(3, restored, stream2)
+
+    for a, b in zip(jax.tree_util.tree_leaves(full.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_resume():
+    cfg = reduced_config(get_arch("gemma-2b"))
+    a = SyntheticLMStream(cfg, 4, 32, seed=1)
+    b1 = [a.next_batch() for _ in range(3)]
+    b = SyntheticLMStream(cfg, 4, 32, seed=1, start_step=2)
+    resumed = b.next_batch()
+    np.testing.assert_array_equal(np.asarray(b1[2]["tokens"]),
+                                  np.asarray(resumed["tokens"]))
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = reduced_config(get_arch("gemma-2b"))
+    s = SyntheticLMStream(cfg, 2, 16, seed=0)
+    batch = s.next_batch()
+    assert batch["tokens"].shape == (2, 16)
+    assert batch["labels"].shape == (2, 16)
+    assert (np.asarray(batch["tokens"]) < cfg.vocab_size).all()
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=200,
+                            warmup_steps=1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw.init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw.update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_adamw_grad_clipping():
+    cfg = adamw.AdamWConfig(lr=1e-3, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(params, cfg)
+    _, _, m = adamw.update({"w": jnp.full(4, 100.0)}, state, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_adamw_bf16_state_compression():
+    cfg = adamw.AdamWConfig(state_dtype="bfloat16")
+    params = {"w": jnp.ones(8, jnp.float32)}
+    state = adamw.init(params, cfg)
+    assert state.m["w"].dtype == jnp.bfloat16
+    p2, s2, _ = adamw.update({"w": jnp.ones(8)}, state, params, cfg)
+    assert s2.m["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_schedule_warmup_cosine():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+    assert float(adamw.schedule(jnp.asarray(5), cfg)) == pytest.approx(0.5)
+    assert float(adamw.schedule(jnp.asarray(10), cfg)) == pytest.approx(1.0)
+    assert float(adamw.schedule(jnp.asarray(100), cfg)) == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_preemption_handler():
+    h = PreemptionHandler(signals=(signal.SIGUSR1,))
+    assert not h.preempted
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert h.preempted
+    h.restore()
+
+
+def test_straggler_monitor_flags_slow_steps():
+    import time
+    mon = StragglerMonitor(threshold=5.0, patience=2, warmup=2)
+    for step in range(12):
+        mon.start_step()
+        time.sleep(0.012 if step in (8, 9, 10) else 0.001)
+        mon.end_step(step)
+    assert mon.flagged, "slow steps were not flagged"
