@@ -1,0 +1,14 @@
+# Tier-1 verify and smoke benchmarks in one command each.
+PY ?= python
+
+.PHONY: test bench-smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+# Fast perf record: mixed-contract bytecode block through one jitted executor.
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload mixed --fast
+
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast

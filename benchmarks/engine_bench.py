@@ -7,13 +7,22 @@ One function per paper figure:
   Fig 5/8 -> bench_blocksize   (throughput vs block size)
   sequential baseline          (pure-Python sequential execution, the paper's
                                 denominator; plus a jitted 1-window engine run)
+  bytecode / mixed             (beyond-paper: interpreter overhead vs the
+                                traced DSL, and heterogeneous blocks served by
+                                ONE jitted executor with zero recompiles)
 
 CPU wall-clock replaces the paper's 32-core Rust numbers; the comparable
 quantities are the *shapes* of the curves and the abort/incarnation
-statistics, which are hardware-independent.  Results go to CSV.
+statistics, which are hardware-independent.  Results go to CSV; the bytecode
+suites additionally emit a ``BENCH_bytecode.json`` perf record at the repo
+root (tps + recompile counts).
+
+  PYTHONPATH=src python -m benchmarks.engine_bench --workload mixed --fast
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -22,6 +31,8 @@ import numpy as np
 from repro.core import workloads as W
 from repro.core.engine import make_executor
 from repro.core.vm import run_sequential
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 DIEM = dict(cfg_reads=W.CHAIN_CFG_READS_DIEM)      # 21 reads / 4 writes
 APTOS = dict(cfg_reads=W.CHAIN_CFG_READS_APTOS)    # 8 reads / 5 writes
@@ -162,13 +173,162 @@ def bench_backends(rows, n_txns=512, accounts=200):
                      f"tps={r['tps']:.0f}"))
 
 
+# ---------------------------------------------------------------------------
+# Bytecode VM suites (beyond paper: programs as data, compile-once serving)
+# ---------------------------------------------------------------------------
+
+def _run_bytecode_p2p(spec, n_txns, window, seed=0, reps=3):
+    """Homogeneous p2p block through the bytecode interpreter: isolates the
+    interpretation overhead vs the traced DSL (same engine, same schedule)."""
+    from repro.bytecode import compile as BC
+    prog = BC.compile_p2p(spec)
+    vm, cfg = BC.vm_and_config([prog], n_txns, spec.n_locs, window=window)
+    run = make_executor(vm, cfg)
+
+    def block(s):
+        params, storage = W.make_p2p_block(spec, n_txns, seed=s)
+        args = BC.pack_args({k: np.asarray(v) for k, v in params.items()},
+                            BC.P2P_ARGS, prog.n_params)
+        return BC.homogeneous_block_params(prog, args), storage
+
+    params, storage = block(seed)
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    assert bool(res.committed)
+    times = []
+    for r in range(reps):
+        params, storage = block(seed + r)
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    t = float(np.median(times))
+    return dict(tps=n_txns / t, seconds=t, waves=int(res.waves),
+                execs=int(res.execs), ops=int(prog.code.shape[0]))
+
+
+def bench_bytecode(rows, n_txns=512, accounts=1000, record=None):
+    """Traced-DSL p2p vs bytecode p2p: the cost of programs-as-data."""
+    spec = W.P2PSpec(n_accounts=accounts)
+    dsl = _run_engine(spec, n_txns, window=32)
+    bc = _run_bytecode_p2p(spec, n_txns, window=32)
+    rows.append(("bytecode_p2p_dsl", dsl["seconds"] * 1e6 / n_txns,
+                 f"tps={dsl['tps']:.0f}"))
+    rows.append(("bytecode_p2p_interp", bc["seconds"] * 1e6 / n_txns,
+                 f"tps={bc['tps']:.0f};ops={bc['ops']};"
+                 f"overhead={dsl['tps']/bc['tps']:.2f}x"))
+    if record is not None:
+        record["p2p_dsl_tps"] = dsl["tps"]
+        record["p2p_bytecode_tps"] = bc["tps"]
+        record["interp_overhead_x"] = dsl["tps"] / bc["tps"]
+
+
+def bench_mixed(rows, n_txns=512, reps=3, record=None):
+    """Heterogeneous blocks: one jitted executor across contract mixes.
+
+    The headline property is the recompile count: every mix (and every seed)
+    reuses the single compiled program — the compile-once serving path.
+    """
+    mixes = [("even", (1, 1, 1)), ("p2p_heavy", (8, 1, 1)),
+             ("indirect_heavy", (1, 8, 1)), ("admission_heavy", (1, 1, 8))]
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(ratios=mixes[0][1]), n_txns, seed=0)
+    run = make_executor(vm, cfg)
+    res = run(params, storage)                       # the one and only compile
+    res.snapshot.block_until_ready()
+    mix_stats = {}
+    for i, (name, ratios) in enumerate(mixes):
+        _, params, storage, _ = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), n_txns, seed=100 + i)
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        assert bool(res.committed)
+        times = []
+        for r in range(reps):
+            _, params, storage, _ = W.make_mixed_block(
+                W.MixedSpec(ratios=ratios), n_txns, seed=200 + 10 * i + r)
+            t0 = time.perf_counter()
+            res = run(params, storage)
+            res.snapshot.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        t = float(np.median(times))
+        seq_t0 = time.perf_counter()
+        run_sequential(vm, params, storage, n_txns)
+        seq_t = time.perf_counter() - seq_t0
+        rows.append((f"mixed_{name}", t * 1e6 / n_txns,
+                     f"tps={n_txns/t:.0f};waves={int(res.waves)};"
+                     f"execs={int(res.execs)};seq_tps={n_txns/seq_t:.0f}"))
+        mix_stats[name] = dict(tps=n_txns / t, waves=int(res.waves),
+                               execs=int(res.execs), seq_tps=n_txns / seq_t)
+    cache = run._cache_size() if hasattr(run, "_cache_size") else None
+    rows.append(("mixed_recompiles", float(cache or 0),
+                 f"jit_cache_entries={cache} (1 = zero re-jits across "
+                 f"{len(mixes)} mixes)"))
+    if record is not None:
+        record["n_txns"] = n_txns
+        record["mixes"] = mix_stats
+        record["jit_cache_entries"] = cache
+        record["recompiles_after_first"] = (cache - 1) if cache else None
+
+
+def write_bytecode_record(record, path=None):
+    record = dict(record)
+    record["suite"] = "bytecode"
+    path = path or os.path.join(_REPO_ROOT, "BENCH_bytecode.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+# One shared block size per mode, so BENCH_bytecode.json is comparable no
+# matter which CLI path produced it.
+FAST_N, FULL_N = 512, 1000
+
+
 def run_all(fast: bool = True):
     rows: list = []
     profiles = [("aptos", APTOS), ("diem", DIEM)]
-    n = 512 if fast else 1000
+    n = FAST_N if fast else FULL_N
     for name, prof in profiles:
         bench_threads(rows, name, prof, n_txns=n)
         bench_contention(rows, name, prof, n_txns=n)
     bench_blocksize(rows, "aptos", APTOS)
     bench_backends(rows)
+    record: dict = {}
+    bench_bytecode(rows, n_txns=n, record=record)
+    bench_mixed(rows, n_txns=n, record=record)
+    write_bytecode_record(record)
     return rows
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="all",
+                    choices=["all", "p2p", "mixed", "bytecode"])
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    args = ap.parse_args()
+
+    rows: list = []
+    n = FAST_N if args.fast else FULL_N
+    record: dict = {}
+    if args.workload == "all":
+        rows = run_all(fast=args.fast)
+    elif args.workload == "p2p":
+        bench_threads(rows, "aptos", APTOS, n_txns=n)
+    elif args.workload == "bytecode":
+        bench_bytecode(rows, n_txns=n, record=record)
+        write_bytecode_record(record)
+    elif args.workload == "mixed":
+        bench_mixed(rows, n_txns=n, record=record)
+        write_bytecode_record(record)
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Heterogeneous blocks through ONE compiled executor (bytecode VM demo).
+
+The Python-DSL engine vmaps a single traced contract over the block: every new
+contract type costs an XLA recompile, and a block can only hold one type.
+The bytecode VM makes programs *data* — each transaction carries its own
+``(code, args)`` — so a single jitted executor serves p2p payments, pointer-
+chasing contracts, and serving-admission transactions mixed in one block, at
+any ratio, with zero recompiles.  That is the compile-once path a production
+validator (or serving gateway) needs: contract mix shifts with traffic, the
+executable never changes.
+
+  PYTHONPATH=src python examples/mixed_contracts.py
+"""
+import time
+
+import numpy as np
+
+from repro.bytecode import compile as BC
+from repro.core import workloads as W
+from repro.core.engine import make_executor
+from repro.core.vm import run_sequential
+
+
+def main():
+    n_txns = 256
+    spec = W.MixedSpec()
+
+    print("== the three contract families, compiled to bytecode ==")
+    adm = BC.compile_admission(spec.admission,
+                               loc_base=spec.p2p.n_locs + spec.indirect.n_locs)
+    print(f"admission contract ({adm.code.shape[0]} ops, "
+          f"{adm.n_regs} regs, {adm.n_reads}R/{adm.n_writes}W):")
+    print(adm.disassemble())
+    print()
+
+    # ONE executor, compiled ONCE, for every mix that follows.
+    vm, params, storage, cfg = W.make_mixed_block(spec, n_txns, seed=0)
+    run = make_executor(vm, cfg)
+    t0 = time.perf_counter()
+    run(params, storage).snapshot.block_until_ready()
+    print(f"compiled the block executor once: {time.perf_counter()-t0:.2f}s\n")
+
+    print(f"{'mix (p2p:ind:adm)':>20} {'waves':>6} {'exec/txn':>9} "
+          f"{'tps':>8} {'ok':>3}")
+    for ratios in [(1, 1, 1), (8, 1, 1), (1, 8, 1), (1, 1, 8), (0, 1, 0)]:
+        vm_, params, storage, cfg_ = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), n_txns, seed=sum(ratios))
+        assert cfg_ == cfg      # same static shapes => same compiled program
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        dt = time.perf_counter() - t0
+        expected = run_sequential(vm, params, storage, n_txns)
+        ok = np.array_equal(np.asarray(res.snapshot), expected)
+        print(f"{str(ratios):>20} {int(res.waves):>6} "
+              f"{int(res.execs)/n_txns:>9.2f} {n_txns/dt:>8.0f} "
+              f"{'✓' if ok else '✗':>3}")
+
+    cache = run._cache_size() if hasattr(run, "_cache_size") else "?"
+    print(f"\njit cache entries after 6 blocks / 5 mixes: {cache} "
+          f"(zero recompiles — programs are data)")
+
+
+if __name__ == "__main__":
+    main()

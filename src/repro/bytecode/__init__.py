@@ -1,0 +1,19 @@
+"""Bytecode transaction VM: programs as data.
+
+The Python-DSL VM (:mod:`repro.core.vm`) requires every transaction in a block
+to be the *same* traced Python function — heterogeneous blocks force one XLA
+compile per contract.  This package makes transaction programs int32 arrays
+interpreted inside the wave engine, so ONE jitted executor serves arbitrary
+mixes of contracts with zero recompiles:
+
+* :mod:`repro.bytecode.isa`       — the register mini-ISA (opcodes, encoding)
+* :mod:`repro.bytecode.interp`    — ``lax.scan``/``lax.switch`` interpreter
+* :mod:`repro.bytecode.assembler` — builder API emitting ``Program`` objects
+* :mod:`repro.bytecode.compile`   — lowerings of the three DSL workloads
+
+See ``src/repro/bytecode/README.md`` for the ISA reference.
+"""
+from repro.bytecode.assembler import Assembler, Program
+from repro.bytecode.interp import BytecodeVM
+
+__all__ = ["Assembler", "Program", "BytecodeVM"]

@@ -1,0 +1,152 @@
+"""Builder API for bytecode programs.
+
+:class:`Assembler` allocates registers and emits instructions through a small
+expression-style surface::
+
+    a = Assembler()
+    src = a.param(0)                       # r <- args[0]
+    bal = a.read(a.add(a.mul(src, a.imm(2)), a.imm(base)))
+    ok  = a.ge(bal, a.param(2))
+    a.write(loc_reg, val_reg, enable=ok)   # conditionally-enabled write
+    a.halt()
+    prog = a.build()
+
+:class:`Program` carries the padded ``(L, 4)`` int32 op array plus the static
+metadata the engine config needs: register-file size, flat-arg count, and the
+READ/WRITE op counts that bound ``max_reads``/``max_writes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.bytecode import isa
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq/hash by identity: the
+class Program:                                 # ndarray field breaks value eq
+    """A compiled transaction program (pure data)."""
+
+    code: np.ndarray    # (L, 4) int32, HALT-padded
+    n_regs: int         # registers used (max index + 1)
+    n_params: int       # flat-arg slots referenced (max index + 1)
+    n_reads: int        # READ op count  -> lower bound for cfg.max_reads
+    n_writes: int       # WRITE op count -> lower bound for cfg.max_writes
+
+    def padded(self, length: int) -> "Program":
+        """Pad (never truncate) the op array to ``length`` rows of HALT."""
+        L = self.code.shape[0]
+        if length < L:
+            raise ValueError(f"cannot pad length {L} program to {length}")
+        pad = np.zeros((length - L, isa.N_FIELDS), np.int32)
+        pad[:, 0] = isa.HALT
+        return dataclasses.replace(
+            self, code=np.concatenate([self.code, pad], axis=0))
+
+    def disassemble(self) -> str:
+        return isa.disassemble(self.code)
+
+
+class Assembler:
+    """Emits one program; registers are allocated, never freed (SSA-ish)."""
+
+    def __init__(self):
+        self._ops: list[tuple[int, int, int, int]] = []
+        self._next_reg = 0
+        self._n_params = 0
+        self._n_reads = 0
+        self._n_writes = 0
+        self._halted = False
+
+    # -- register allocation -------------------------------------------------
+    def reg(self) -> int:
+        r = self._next_reg
+        self._next_reg += 1
+        return r
+
+    def _emit(self, op: int, a: int = 0, b: int = 0, c: int = 0) -> None:
+        if self._halted:
+            raise ValueError("program already HALTed")
+        for f in (a, b, c):
+            if not (-2**31 <= f < 2**31):
+                raise ValueError(f"field {f} overflows int32")
+        self._ops.append((op, a, b, c))
+
+    # -- values --------------------------------------------------------------
+    def param(self, idx: int) -> int:
+        """r <- args[idx]."""
+        if idx < 0:
+            raise ValueError("param index must be >= 0")
+        self._n_params = max(self._n_params, idx + 1)
+        r = self.reg()
+        self._emit(isa.LOAD_PARAM, r, idx)
+        return r
+
+    def imm(self, value: int) -> int:
+        r = self.reg()
+        self._emit(isa.LOAD_IMM, r, int(value))
+        return r
+
+    def mov(self, src: int) -> int:
+        r = self.reg()
+        self._emit(isa.MOV, r, src)
+        return r
+
+    # -- memory --------------------------------------------------------------
+    def read(self, loc: int, *, enable: int | None = None) -> int:
+        """r <- mem[regs[loc]]; a disabled read yields 0."""
+        self._n_reads += 1
+        r = self.reg()
+        self._emit(isa.READ, r, loc, isa.ALWAYS if enable is None else enable)
+        return r
+
+    def write(self, loc: int, value: int, *, enable: int | None = None) -> None:
+        """mem[regs[loc]] <- regs[value], gated on regs[enable] != 0."""
+        self._n_writes += 1
+        self._emit(isa.WRITE, loc, value,
+                   isa.ALWAYS if enable is None else enable)
+
+    # -- ALU -----------------------------------------------------------------
+    def _binop(self, op: int, x: int, y: int) -> int:
+        r = self.reg()
+        self._emit(op, r, x, y)
+        return r
+
+    def add(self, x: int, y: int) -> int:
+        return self._binop(isa.ADD, x, y)
+
+    def sub(self, x: int, y: int) -> int:
+        return self._binop(isa.SUB, x, y)
+
+    def mul(self, x: int, y: int) -> int:
+        return self._binop(isa.MUL, x, y)
+
+    def ge(self, x: int, y: int) -> int:
+        return self._binop(isa.GE, x, y)
+
+    def le(self, x: int, y: int) -> int:
+        return self._binop(isa.LE, x, y)
+
+    def and_(self, x: int, y: int) -> int:
+        return self._binop(isa.AND, x, y)
+
+    def select(self, cond: int, x: int, y: int) -> int:
+        """r <- regs[cond] != 0 ? regs[x] : regs[y] (non-destructive)."""
+        r = self.mov(cond)
+        self._emit(isa.SELECT, r, x, y)
+        return r
+
+    def halt(self) -> None:
+        self._emit(isa.HALT)
+        self._halted = True
+
+    # -- finalization --------------------------------------------------------
+    def build(self, pad_to: int | None = None) -> Program:
+        if not self._halted:
+            self.halt()
+        code = np.asarray(self._ops, np.int32).reshape(-1, isa.N_FIELDS)
+        prog = Program(code=code, n_regs=max(self._next_reg, 1),
+                       n_params=self._n_params, n_reads=self._n_reads,
+                       n_writes=self._n_writes)
+        return prog if pad_to is None else prog.padded(pad_to)

@@ -1,0 +1,129 @@
+"""Lowerings of the Python-DSL workloads to bytecode.
+
+Each ``compile_*`` mirrors its :mod:`repro.core.workloads` counterpart
+read-for-read and write-for-write, so the compiled program is txn-for-txn
+equivalent to the traced DSL program (property-tested in
+``tests/test_bytecode.py``).
+
+Every compiler takes a ``loc_base`` so a mixed block can lay the three
+contract families out in one disjoint location universe:
+
+  [0, p2p.n_locs)                                — balances/seqnos/chain-cfg
+  [p2p.n_locs, p2p.n_locs + indirect.n_locs)     — pointer cells + targets
+  [.., + admission.n_locs)                       — free-list head + quotas
+
+For ``indirect``, pointer *values* stored in memory are absolute locations:
+the block generator offsets the initial pointers and the ``new_target``
+params by the region base, so the program itself only rebases the static
+``slot`` id.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.bytecode.assembler import Assembler, Program
+from repro.bytecode.interp import BytecodeVM
+from repro.core.types import EngineConfig
+from repro.core.workloads import AdmissionSpec, IndirectSpec, P2PSpec
+
+# Flat-arg vector layout per family (LOAD_PARAM indices).
+P2P_ARGS = ("src", "dst", "amount")
+INDIRECT_ARGS = ("slot", "delta", "new_target", "repoint")
+ADMISSION_ARGS = ("tenant", "group", "pages")
+
+
+def compile_p2p(spec: P2PSpec, loc_base: int = 0) -> Program:
+    """Lower ``p2p_program``: cfg reads, balance transfer, seqno bumps."""
+    a = Assembler()
+    cfg_base = loc_base + 2 * spec.n_accounts
+    for k in range(spec.cfg_reads):
+        a.read(a.imm(cfg_base + k))
+    src, dst, amt = a.param(0), a.param(1), a.param(2)
+    two, base = a.imm(2), a.imm(loc_base)
+    src_bal_loc = a.add(a.mul(src, two), base)
+    dst_bal_loc = a.add(a.mul(dst, two), base)
+    src_bal = a.read(src_bal_loc)
+    dst_bal = a.read(dst_bal_loc)
+    ok = a.ge(src_bal, amt)                    # conditional => dynamic write set
+    a.write(src_bal_loc, a.sub(src_bal, amt), enable=ok)
+    a.write(dst_bal_loc, a.add(dst_bal, amt), enable=ok)
+    if spec.write_seqno:
+        one = a.imm(1)
+        src_seq_loc = a.add(src_bal_loc, one)
+        dst_seq_loc = a.add(dst_bal_loc, one)
+        src_seq = a.read(src_seq_loc)
+        dst_seq = a.read(dst_seq_loc)
+        a.write(src_seq_loc, a.add(src_seq, one))
+        a.write(dst_seq_loc, a.add(dst_seq, one), enable=ok)
+    return a.build()
+
+
+def compile_indirect(spec: IndirectSpec, loc_base: int = 0) -> Program:
+    """Lower ``indirect_program``: pointer chase with occasional repoint."""
+    a = Assembler()
+    slot_loc = a.add(a.param(0), a.imm(loc_base))
+    target = a.read(slot_loc)                  # hop 1: discover the target
+    val = a.read(target)                       # hop 2: dynamic location
+    a.write(target, a.add(val, a.param(1)))    # RMW on the discovered cell
+    a.write(slot_loc, a.param(2), enable=a.param(3))
+    return a.build()
+
+
+def compile_admission(spec: AdmissionSpec, loc_base: int = 0) -> Program:
+    """Lower ``admission_program``: page allocation against head + quota."""
+    a = Assembler()
+    head = a.read(a.imm(loc_base))             # free-list head (hot!)
+    tenant, group, pages = a.param(0), a.param(1), a.param(2)
+    used_loc = a.add(tenant, a.imm(loc_base + 1))
+    used = a.read(used_loc)
+    grp_loc = a.add(group, a.imm(loc_base + 1 + spec.n_tenants))
+    grp = a.read(grp_loc)
+    new_head = a.add(head, pages)
+    new_used = a.add(used, pages)
+    fits = a.and_(a.le(new_head, a.imm(spec.total_pages)),
+                  a.le(new_used, a.imm(spec.quota_per_tenant)))
+    a.write(a.imm(loc_base), new_head, enable=fits)
+    a.write(used_loc, new_used, enable=fits)
+    a.write(grp_loc, a.add(grp, pages), enable=fits)
+    return a.build()
+
+
+# ---------------------------------------------------------------------------
+# Block assembly helpers
+# ---------------------------------------------------------------------------
+
+def pack_args(params: dict, order: tuple[str, ...], n_slots: int) -> np.ndarray:
+    """dict of (n,) arrays -> (n, n_slots) int32 flat-arg matrix."""
+    cols = [np.asarray(params[name], np.int32) for name in order]
+    n = cols[0].shape[0]
+    out = np.zeros((n, n_slots), np.int32)
+    for j, col in enumerate(cols):
+        out[:, j] = col
+    return out
+
+
+def homogeneous_block_params(prog: Program, args: np.ndarray) -> dict:
+    """Replicate one program across the block: (code, args) per txn."""
+    import jax.numpy as jnp
+    n = args.shape[0]
+    code = np.broadcast_to(prog.code[None], (n,) + prog.code.shape)
+    return {"code": jnp.asarray(np.ascontiguousarray(code)),
+            "args": jnp.asarray(args)}
+
+
+def vm_and_config(progs: list[Program], n_txns: int, n_locs: int,
+                  **cfg_kw) -> tuple[BytecodeVM, EngineConfig]:
+    """Interpreter + engine config sized for the union of ``progs``."""
+    cfg = EngineConfig(
+        n_txns=n_txns, n_locs=n_locs,
+        max_reads=max(p.n_reads for p in progs),
+        max_writes=max(p.n_writes for p in progs),
+        **cfg_kw)
+    vm = BytecodeVM(n_regs=max(p.n_regs for p in progs))
+    return vm, cfg
+
+
+def pad_common(progs: list[Program]) -> list[Program]:
+    """Pad every program to the longest op count (one block = one L)."""
+    L = max(p.code.shape[0] for p in progs)
+    return [p.padded(L) for p in progs]

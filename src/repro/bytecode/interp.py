@@ -1,0 +1,254 @@
+"""Bytecode interpreter: one ``lax.scan`` over ops, ``lax.switch`` dispatch.
+
+:class:`BytecodeVM` runs a transaction whose *program is data* — the txn's
+params carry ``code`` ``(L, 4)`` int32 and ``args`` ``(P,)`` int32 — inside
+the same two harnesses as the Python DSL programs of :mod:`repro.core.vm`:
+
+* ``execute_spec`` — speculative JAX execution in the wave engine.  It mirrors
+  :class:`~repro.core.vm.SpecCtx` semantics exactly (read-own-write first,
+  then the MV resolver; ESTIMATE hits set ``blocked``; latest-write-per-
+  location dedup) but with *traced* slot counters, because slots are consumed
+  by data-dependent READ/WRITE ops rather than static Python call sites.  The
+  result is a standard :class:`~repro.core.types.ExecResult`, so dependency
+  detection, validation, and the commit frontier are untouched.
+* ``__call__(p, ctx)`` — plain-Python interpretation against
+  :class:`~repro.core.vm.OracleCtx`, so ``run_sequential`` accepts a
+  :class:`BytecodeVM` directly as the ground-truth reference.
+
+Cost model: a wave executes ``window`` txns × ``L`` ops; under ``vmap`` the
+``lax.switch`` lowers to computing every opcode's branch and selecting
+per-lane — the standard price of SIMD-interpreting heterogeneous programs.
+Branches are O(max_reads + max_writes) scalar work, so a wave is
+O(window · L · (R + W)) plus one MV resolve per READ op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.bytecode import isa
+from repro.core.types import NO_LOC, STORAGE, EngineConfig, ExecResult
+
+
+class _VMState(NamedTuple):
+    """Scan carry: register file + the SpecCtx-equivalent record arrays."""
+
+    regs: jax.Array          # (n_regs,) value_dtype
+    read_locs: jax.Array     # (R,) i32
+    read_writer: jax.Array   # (R,) i32
+    read_inc: jax.Array      # (R,) i32
+    write_locs: jax.Array    # (W,) i32
+    write_vals: jax.Array    # (W,) value_dtype
+    r: jax.Array             # () i32 next read slot
+    w: jax.Array             # () i32 next write slot
+    blocked: jax.Array       # () bool
+    blocker: jax.Array       # () i32
+    done: jax.Array          # () bool (HALT reached)
+
+
+class BytecodeVM:
+    """Interpreter for ``(code, args)`` transactions.
+
+    ``n_regs`` is the static register-file size (>= max register index + 1
+    across every program that may appear in a block).
+    """
+
+    def __init__(self, n_regs: int):
+        if n_regs < 1:
+            raise ValueError("n_regs must be >= 1")
+        self.n_regs = n_regs
+
+    # -- speculative path (wave engine) -------------------------------------
+    def execute_spec(self, cfg: EngineConfig, txn_idx: jax.Array, resolver,
+                     value_reader, p) -> ExecResult:
+        code = jnp.asarray(p["code"], jnp.int32)
+        args = jnp.asarray(p["args"], cfg.value_dtype)
+        n_regs, R, W = self.n_regs, cfg.max_reads, cfg.max_writes
+        vdt = cfg.value_dtype
+
+        def creg(i):
+            return jnp.clip(i, 0, n_regs - 1)
+
+        def enab(st, c):
+            return jnp.where(c < 0, True, st.regs[creg(c)] != 0)
+
+        def set_reg(st, i, v):
+            return st._replace(regs=st.regs.at[creg(i)].set(v.astype(vdt)))
+
+        def op_halt(st, a, b, c):
+            return st._replace(done=jnp.asarray(True))
+
+        def op_load_param(st, a, b, c):
+            return set_reg(st, a, args[jnp.clip(b, 0, args.shape[0] - 1)])
+
+        def op_load_imm(st, a, b, c):
+            return set_reg(st, a, b.astype(vdt))
+
+        def op_mov(st, a, b, c):
+            return set_reg(st, a, st.regs[creg(b)])
+
+        def op_read(st, a, b, c):
+            loc = st.regs[creg(b)].astype(jnp.int32)
+            enabled = enab(st, c) & ~st.blocked
+            eff_loc = jnp.where(enabled, loc, NO_LOC)
+            # read-own-write: write-time dedup keeps at most one live match.
+            own = st.write_locs == eff_loc
+            own_hit = own.any()
+            own_val = jnp.where(own, st.write_vals, 0).sum().astype(vdt)
+            res = resolver(eff_loc, txn_idx)
+            mv_val = value_reader(res, eff_loc)
+            value = jnp.where(own_hit, own_val, mv_val)
+            value = jnp.where(enabled, value, 0).astype(vdt)
+            rec = enabled & ~own_hit
+            slot = jnp.clip(st.r, 0, R - 1)
+            st = st._replace(
+                read_locs=st.read_locs.at[slot].set(
+                    jnp.where(rec, eff_loc, NO_LOC)),
+                read_writer=st.read_writer.at[slot].set(
+                    jnp.where(rec & res.found, res.writer, STORAGE)),
+                read_inc=st.read_inc.at[slot].set(
+                    jnp.where(rec & res.found, res.inc, -1)),
+                r=st.r + 1,
+            )
+            hit_est = rec & res.is_estimate & ~st.blocked
+            st = st._replace(
+                blocker=jnp.where(hit_est, res.writer, st.blocker),
+                blocked=st.blocked | hit_est,
+            )
+            return set_reg(st, a, value)
+
+        def op_write(st, a, b, c):
+            loc = st.regs[creg(a)].astype(jnp.int32)
+            value = st.regs[creg(b)]
+            enabled = enab(st, c) & ~st.blocked
+            # latest-value-per-location: kill earlier live slots on this loc.
+            wlocs = jnp.where(enabled & (st.write_locs == loc), NO_LOC,
+                              st.write_locs)
+            slot = jnp.clip(st.w, 0, W - 1)
+            return st._replace(
+                write_locs=wlocs.at[slot].set(jnp.where(enabled, loc, NO_LOC)),
+                write_vals=st.write_vals.at[slot].set(
+                    jnp.where(enabled, value, 0).astype(vdt)),
+                w=st.w + 1,
+            )
+
+        def alu(fn):
+            def op(st, a, b, c):
+                return set_reg(st, a, fn(st.regs[creg(b)], st.regs[creg(c)]))
+            return op
+
+        def op_select(st, a, b, c):
+            cond = st.regs[creg(a)] != 0
+            return set_reg(st, a, jnp.where(cond, st.regs[creg(b)],
+                                            st.regs[creg(c)]))
+
+        branches = [None] * isa.N_OPCODES
+        branches[isa.HALT] = op_halt
+        branches[isa.LOAD_PARAM] = op_load_param
+        branches[isa.LOAD_IMM] = op_load_imm
+        branches[isa.MOV] = op_mov
+        branches[isa.READ] = op_read
+        branches[isa.WRITE] = op_write
+        branches[isa.ADD] = alu(lambda x, y: x + y)
+        branches[isa.SUB] = alu(lambda x, y: x - y)
+        branches[isa.MUL] = alu(lambda x, y: x * y)
+        branches[isa.GE] = alu(lambda x, y: (x >= y).astype(vdt))
+        branches[isa.LE] = alu(lambda x, y: (x <= y).astype(vdt))
+        branches[isa.AND] = alu(lambda x, y: ((x != 0) & (y != 0)).astype(vdt))
+        branches[isa.SELECT] = op_select
+
+        def step(st: _VMState, row):
+            op, a, b, c = row[0], row[1], row[2], row[3]
+            # undefined opcode traps to HALT (never silently runs another op)
+            op = jnp.where((op >= 0) & (op < isa.N_OPCODES), op, isa.HALT)
+            new = jax.lax.switch(op, branches, st, a, b, c)
+            # everything after HALT is a no-op (state passes through unchanged)
+            active = ~st.done
+            st = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(active, n, o), new, st)
+            return st, None
+
+        init = _VMState(
+            regs=jnp.zeros((n_regs,), vdt),
+            read_locs=jnp.full((R,), NO_LOC, jnp.int32),
+            read_writer=jnp.full((R,), STORAGE, jnp.int32),
+            read_inc=jnp.full((R,), -1, jnp.int32),
+            write_locs=jnp.full((W,), NO_LOC, jnp.int32),
+            write_vals=jnp.zeros((W,), vdt),
+            r=jnp.asarray(0, jnp.int32), w=jnp.asarray(0, jnp.int32),
+            blocked=jnp.asarray(False), blocker=jnp.asarray(-1, jnp.int32),
+            done=jnp.asarray(False),
+        )
+        st, _ = jax.lax.scan(step, init, code)
+        # Slot overflow (more executed READ/WRITE ops than the engine config
+        # provisions) would have clamped onto the last slot, dropping records
+        # that validation needs.  SpecCtx raises at trace time; programs are
+        # runtime data here, so fail loudly instead of silently: report the
+        # incarnation blocked on ITSELF — an unresolvable dependency, so the
+        # engine stalls to its wave cap and returns committed=False.
+        overflow = (st.r > R) | (st.w > W)
+        return ExecResult(
+            read_locs=st.read_locs, read_writer=st.read_writer,
+            read_inc=st.read_inc, write_locs=st.write_locs,
+            write_vals=st.write_vals,
+            blocked=st.blocked | overflow,
+            blocker=jnp.where(overflow, txn_idx, st.blocker))
+
+    # -- sequential oracle path ---------------------------------------------
+    def __call__(self, p, ctx) -> None:
+        """Interpret against a plain read/write context (e.g. ``OracleCtx``).
+
+        Malformed operands are clamped exactly as in ``execute_spec`` so the
+        two harnesses never diverge, even on hand-authored bytecode.
+        """
+        import numpy as np
+        code = np.asarray(p["code"])
+        args = np.asarray(p["args"])
+        regs = [0] * self.n_regs
+
+        def cr(i):        # register operand, clamped like creg()
+            return min(max(i, 0), self.n_regs - 1)
+
+        def cp(i):        # param operand, clamped like the args gather
+            return min(max(i, 0), args.shape[0] - 1)
+
+        for op, a, b, c in code.tolist():
+            if op == isa.HALT:
+                break
+            elif op == isa.LOAD_PARAM:
+                regs[cr(a)] = int(args[cp(b)])
+            elif op == isa.LOAD_IMM:
+                regs[cr(a)] = int(b)
+            elif op == isa.MOV:
+                regs[cr(a)] = regs[cr(b)]
+            elif op == isa.READ:
+                en = True if c < 0 else regs[cr(c)] != 0
+                v = ctx.read(regs[cr(b)] if en else NO_LOC, enabled=en)
+                regs[cr(a)] = int(np.asarray(v)) if en else 0
+            elif op == isa.WRITE:
+                en = True if c < 0 else regs[cr(c)] != 0
+                ctx.write(regs[cr(a)] if en else NO_LOC, regs[cr(b)],
+                          enabled=en)
+            elif op == isa.ADD:
+                regs[cr(a)] = _i32(regs[cr(b)] + regs[cr(c)])
+            elif op == isa.SUB:
+                regs[cr(a)] = _i32(regs[cr(b)] - regs[cr(c)])
+            elif op == isa.MUL:
+                regs[cr(a)] = _i32(regs[cr(b)] * regs[cr(c)])
+            elif op == isa.GE:
+                regs[cr(a)] = int(regs[cr(b)] >= regs[cr(c)])
+            elif op == isa.LE:
+                regs[cr(a)] = int(regs[cr(b)] <= regs[cr(c)])
+            elif op == isa.AND:
+                regs[cr(a)] = int(regs[cr(b)] != 0 and regs[cr(c)] != 0)
+            elif op == isa.SELECT:
+                regs[cr(a)] = regs[cr(b)] if regs[cr(a)] != 0 else regs[cr(c)]
+            else:
+                break  # undefined opcode traps to HALT, as in execute_spec
+
+
+def _i32(x: int) -> int:
+    """Wrap to int32 to match the JAX interpreter's register arithmetic."""
+    return ((int(x) + 2**31) % 2**32) - 2**31

@@ -1,0 +1,65 @@
+"""Register mini-ISA for transaction programs.
+
+An instruction is a row of 4 int32 fields ``[op, a, b, c]``; a program is a
+fixed-shape ``(L, 4)`` int32 array, padded with HALT rows.  Registers hold
+``value_dtype`` scalars (int32); location ids and data values share the
+register file, which is what makes dynamic read sets (`READ` of a computed
+location) expressible.
+
+Operand conventions (see README.md for the full table):
+
+  HALT                          stop; every later op is a no-op
+  LOAD_PARAM  r[a] = params[b]  b indexes the txn's flat arg vector
+  LOAD_IMM    r[a] = b          b is a signed immediate
+  MOV         r[a] = r[b]
+  READ        r[a] = mem[r[b]]  enable mask in register c (c < 0: always on)
+  WRITE       mem[r[a]] = r[b]  enable mask in register c (c < 0: always on)
+  ADD/SUB/MUL r[a] = r[b] op r[c]
+  GE/LE       r[a] = r[b] >= r[c]  (resp. <=), as 0/1
+  AND         r[a] = (r[b] != 0) & (r[c] != 0), as 0/1
+  SELECT      r[a] = r[a] != 0 ? r[b] : r[c]
+
+``READ``/``WRITE`` are the only externally-visible ops: they consume one
+read/write slot each time they execute (whether or not their enable mask is
+on), mirroring the static call-site slot accounting of the Python DSL — so
+``EngineConfig.max_reads/max_writes`` must bound the per-program READ/WRITE
+op counts, which the assembler records on :class:`~repro.bytecode.assembler.Program`.
+"""
+from __future__ import annotations
+
+HALT = 0
+LOAD_PARAM = 1
+LOAD_IMM = 2
+MOV = 3
+READ = 4
+WRITE = 5
+ADD = 6
+SUB = 7
+MUL = 8
+GE = 9
+LE = 10
+AND = 11
+SELECT = 12
+
+N_OPCODES = 13
+
+ALWAYS = -1        # enable-operand sentinel: unconditionally enabled
+N_FIELDS = 4       # [op, a, b, c]
+
+MNEMONICS = {
+    HALT: "HALT", LOAD_PARAM: "LOAD_PARAM", LOAD_IMM: "LOAD_IMM", MOV: "MOV",
+    READ: "READ", WRITE: "WRITE", ADD: "ADD", SUB: "SUB", MUL: "MUL",
+    GE: "GE", LE: "LE", AND: "AND", SELECT: "SELECT",
+}
+
+
+def disassemble(code) -> str:
+    """Human-readable listing of an ``(L, 4)`` op array (stops at first HALT)."""
+    import numpy as np
+    lines = []
+    for i, (op, a, b, c) in enumerate(np.asarray(code)):
+        name = MNEMONICS.get(int(op), f"?{int(op)}")
+        lines.append(f"{i:3d}: {name:<10} a={int(a):<4} b={int(b):<4} c={int(c)}")
+        if int(op) == HALT:
+            break
+    return "\n".join(lines)

@@ -99,13 +99,26 @@ def _make_resolver(state: EngineState, cfg: EngineConfig):
 def _execute_wave(state: EngineState, active_ids: jax.Array,
                   program: TxnProgram, params: Any, storage: jax.Array,
                   cfg: EngineConfig) -> ExecResult:
-    """vmap the VM over the wave; reads resolve against the wave-start index."""
+    """vmap the VM over the wave; reads resolve against the wave-start index.
+
+    Two program representations share this path:
+      * Python-DSL programs (``(params, ctx) -> None``) run under ``SpecCtx``,
+        whose read/write slots are static call sites.
+      * Objects exposing ``execute_spec(cfg, txn_idx, resolver, value_reader,
+        p) -> ExecResult`` (e.g. :class:`repro.bytecode.interp.BytecodeVM`)
+        manage their own slot accounting — programs are per-txn *data*
+        (``p['code']``), so one jitted executor serves heterogeneous blocks.
+    """
     resolver = _make_resolver(state, cfg)
 
     def value_reader(res, loc):
         return mvindex.resolve_value(state.write_vals, storage, res, loc)
 
+    execute_spec = getattr(program, "execute_spec", None)
+
     def exec_one(txn_idx, p):
+        if execute_spec is not None:
+            return execute_spec(cfg, txn_idx, resolver, value_reader, p)
         ctx = SpecCtx(cfg, txn_idx, resolver, value_reader)
         program(p, ctx)
         return ctx.result()

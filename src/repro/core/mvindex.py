@@ -41,10 +41,13 @@ class MVIndex(NamedTuple):
 def build_index(write_locs: jax.Array, n_txns: int) -> MVIndex:
     """Sort all live (loc, writer) write slots into a binary-searchable index."""
     n, w = write_locs.shape
+    if write_locs.dtype != jnp.int32:
+        raise TypeError(f"write_locs must be int32, got {write_locs.dtype}")
     writer = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
     slot = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None, :], (n, w))
     live = write_locs != NO_LOC
     keys = write_locs * (n_txns + 1) + writer
+    assert keys.dtype == jnp.int32, keys.dtype  # EngineState.idx_keys contract
     keys = jnp.where(live, keys, _KEY_MAX).reshape(-1)
     # NOTE (§Perf engine iteration 4, refuted): replacing argsort+gathers
     # with a 3-operand lax.sort co-sort measured ~30% SLOWER on the XLA CPU

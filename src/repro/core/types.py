@@ -74,7 +74,9 @@ class EngineState(NamedTuple):
     frontier: jax.Array          # () i32: txns < frontier are committed
     wave: jax.Array              # () i32
     # -- sorted multi-version index (rebuilt each wave) ----------------------
-    idx_keys: jax.Array          # (n*W,) i64 sorted keys loc*(n+1)+writer, dead=MAX
+    idx_keys: jax.Array          # (n*W,) i32 sorted keys loc*(n+1)+writer, dead=MAX
+                                 # (int32 by construction: x64 is disabled and
+                                 # EngineConfig.__post_init__ rejects overflow)
     idx_txn: jax.Array           # (n*W,) i32 writer txn of the sorted entry
     idx_slot: jax.Array          # (n*W,) i32 write slot of the sorted entry
     # -- statistics ----------------------------------------------------------

@@ -201,3 +201,84 @@ def admission_engine_config(spec: AdmissionSpec, n_txns: int, window: int = 32,
     return EngineConfig(n_txns=n_txns, n_locs=spec.n_locs,
                         max_reads=spec.max_reads, max_writes=spec.max_writes,
                         window=window, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-contract blocks (bytecode VM): all three families in ONE block.
+# The paper evaluates adversarially mixed workloads; the Python DSL cannot
+# express them (vmap needs one traced program), the bytecode VM can — each
+# txn carries its own (code, args).  Location regions are disjoint:
+#   [0, p2p.n_locs) | [.., +indirect.n_locs) | [.., +admission.n_locs).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MixedSpec:
+    p2p: P2PSpec = P2PSpec(n_accounts=100)
+    indirect: IndirectSpec = IndirectSpec(n_slots=50)
+    admission: AdmissionSpec = AdmissionSpec(
+        n_tenants=3, n_groups=8, total_pages=4096, quota_per_tenant=2048)
+    ratios: tuple = (1.0, 1.0, 1.0)   # p2p : indirect : admission
+
+    @property
+    def n_locs(self) -> int:
+        return self.p2p.n_locs + self.indirect.n_locs + self.admission.n_locs
+
+
+def make_mixed_block(spec: MixedSpec, n_txns: int, seed: int = 0,
+                     init_balance: int = 10**6, repoint_prob: float = 0.2,
+                     window: int = 32, **cfg_kw):
+    """Heterogeneous block: the three contract families interleaved at
+    ``spec.ratios``.  Returns ``(vm, params, storage, cfg)`` where ``params``
+    carries per-txn ``(code, args)`` — one jitted ``make_executor(vm, cfg)``
+    runs ANY mix with zero recompiles.
+    """
+    from repro.bytecode import compile as BC
+
+    rng = np.random.default_rng(seed)
+    p2p_base = 0
+    ind_base = spec.p2p.n_locs
+    adm_base = ind_base + spec.indirect.n_locs
+
+    progs = BC.pad_common([
+        BC.compile_p2p(spec.p2p, loc_base=p2p_base),
+        BC.compile_indirect(spec.indirect, loc_base=ind_base),
+        BC.compile_admission(spec.admission, loc_base=adm_base),
+    ])
+    n_params = max(p.n_params for p in progs)
+    fam_code = np.stack([p.code for p in progs])          # (3, L, 4)
+
+    # Reuse the single-family generators (one derived seed each) so the mixed
+    # distributions can never drift from the homogeneous ones.
+    p2p_params, p2p_storage = make_p2p_block(
+        spec.p2p, n_txns, seed=seed, init_balance=init_balance)
+    ind_params, ind_storage = make_indirect_block(
+        spec.indirect, n_txns, seed=seed + 1, repoint_prob=repoint_prob)
+    adm_params, adm_storage = make_admission_block(
+        spec.admission, n_txns, seed=seed + 2)
+    # Pointer VALUES in the indirect family are absolute locations in the
+    # mixed universe: offset both the stored pointers and new_target params.
+    ind_params = dict(ind_params,
+                      new_target=jnp.asarray(ind_params["new_target"])
+                      + ind_base)
+    ind_storage = np.asarray(ind_storage).copy()
+    ind_storage[:spec.indirect.n_slots] += ind_base
+
+    fam_args = [BC.pack_args({k: np.asarray(v) for k, v in p.items()},
+                             order, n_params)
+                for p, order in ((p2p_params, BC.P2P_ARGS),
+                                 (ind_params, BC.INDIRECT_ARGS),
+                                 (adm_params, BC.ADMISSION_ARGS))]
+
+    ratios = np.asarray(spec.ratios, np.float64)
+    if ratios.shape != (3,) or (ratios < 0).any() or ratios.sum() <= 0:
+        raise ValueError(f"ratios must be 3 non-negative weights with a "
+                         f"positive sum, got {spec.ratios}")
+    fam = rng.choice(3, size=n_txns, p=ratios / ratios.sum())
+    args = np.choose(fam[:, None], fam_args).astype(np.int32)
+    params = {"code": jnp.asarray(fam_code[fam]), "args": jnp.asarray(args)}
+
+    storage = np.concatenate([np.asarray(p2p_storage), ind_storage,
+                              np.asarray(adm_storage)]).astype(np.int32)
+    vm, cfg = BC.vm_and_config(progs, n_txns, spec.n_locs, window=window,
+                               **cfg_kw)
+    return vm, params, jnp.asarray(storage), cfg

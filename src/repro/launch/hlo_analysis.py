@@ -133,7 +133,14 @@ def _operand_names(line: str, op: str) -> list[str]:
                 cur += ch
     if cur.strip():
         out.append(cur.strip())
-    return [o.lstrip("%") for o in out if o.strip().startswith("%")]
+    # Operands print either bare ("%name") or typed ("f32[8,8]{1,0} %name")
+    # depending on the XLA version; the reference is the last token either way.
+    names = []
+    for o in out:
+        tok = o.split()[-1] if o.split() else ""
+        if tok.startswith("%"):
+            names.append(tok.lstrip("%"))
+    return names
 
 
 def parse_module(text: str) -> dict[str, Computation]:

@@ -1,0 +1,70 @@
+"""``hypothesis`` when installed, else a deterministic sampled fallback.
+
+The property tests are the repo's central safety net (engine ≡ sequential),
+so they must run even on images without hypothesis.  The fallback implements
+just the surface these tests use — ``given``/``settings`` and the
+``sampled_from``/``integers``/``floats`` strategies — drawing ``max_examples``
+pseudo-random samples from a per-test deterministic seed.  No shrinking, no
+database; with real hypothesis installed this module is a pass-through.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import zlib
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def draw(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # NOTE: the wrapper must take NO parameters — functools.wraps
+            # would copy fn's signature and pytest would then demand fixtures
+            # named after the strategy arguments.
+            def wrapper():
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", 10))
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strats.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -2,8 +2,7 @@
 LiTM-style deterministic STM — correctness + behavioral properties."""
 import jax
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import baselines as B
 from repro.core import workloads as W

@@ -1,0 +1,249 @@
+"""Bytecode VM: compiled workloads ≡ Python-DSL counterparts, mixed blocks ≡
+sequential execution, and the compile-once serving property (zero re-jits
+across contract mixes).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypo import given, settings, st
+
+from repro.bytecode import BytecodeVM, isa
+from repro.bytecode import compile as BC
+from repro.bytecode.assembler import Assembler
+from repro.core import workloads as W
+from repro.core.engine import make_executor, run_block
+from repro.core.vm import OracleCtx, run_sequential, unstack_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _bytecode_block(prog, order, dsl_params):
+    args = BC.pack_args({k: np.asarray(v) for k, v in dsl_params.items()},
+                        order, n_slots=prog.n_params)
+    return BC.homogeneous_block_params(prog, args)
+
+
+def _steps_sequential(program, params_list, storage):
+    """Per-txn state trajectory under the sequential oracle."""
+    state: dict = {}
+    storage = np.asarray(storage)
+    out = []
+    for p in params_list:
+        ctx = OracleCtx(state, storage)
+        program(p, ctx)
+        ctx.commit()
+        out.append(dict(state))
+    return out
+
+
+def _families(n_accounts=10, n_slots=8):
+    p2p = W.P2PSpec(n_accounts=n_accounts)
+    ind = W.IndirectSpec(n_slots=n_slots)
+    adm = W.AdmissionSpec(n_tenants=3, n_groups=8, total_pages=96,
+                          quota_per_tenant=64)
+    return [
+        ("p2p", p2p, W.p2p_program(p2p), BC.compile_p2p(p2p), BC.P2P_ARGS,
+         lambda n, s: W.make_p2p_block(p2p, n, seed=s)),
+        ("indirect", ind, W.indirect_program(ind), BC.compile_indirect(ind),
+         BC.INDIRECT_ARGS, lambda n, s: W.make_indirect_block(ind, n, seed=s)),
+        ("admission", adm, W.admission_program(adm), BC.compile_admission(adm),
+         BC.ADMISSION_ARGS, lambda n, s: W.make_admission_block(adm, n, seed=s)),
+    ]
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_txns=st.integers(4, 32), seed=st.integers(0, 2**16),
+       fam_idx=st.sampled_from([0, 1, 2]))
+def test_compiled_matches_dsl_txn_for_txn(n_txns, seed, fam_idx):
+    """Sequential oracle: the bytecode program produces the SAME state as its
+    Python-DSL counterpart after EVERY transaction, not just at block end."""
+    name, spec, dsl_prog, prog, order, make = _families()[fam_idx]
+    params, storage = make(n_txns, seed)
+    bparams = _bytecode_block(prog, order, params)
+    vm = BytecodeVM(n_regs=prog.n_regs)
+    dsl_steps = _steps_sequential(dsl_prog, unstack_params(params, n_txns),
+                                  storage)
+    bc_steps = _steps_sequential(vm, unstack_params(bparams, n_txns), storage)
+    for i, (d, b) in enumerate(zip(dsl_steps, bc_steps)):
+        assert d == b, f"{name}: state diverged after txn {i}: {d} != {b}"
+
+
+@settings(max_examples=6, deadline=None)
+@given(n_txns=st.integers(4, 32), seed=st.integers(0, 2**16),
+       window=st.sampled_from([1, 4, 16]),
+       fam_idx=st.sampled_from([0, 1, 2]))
+def test_compiled_engine_matches_dsl_engine(n_txns, seed, window, fam_idx):
+    """Wave engine: bytecode block snapshot == DSL block snapshot == seq."""
+    name, spec, dsl_prog, prog, order, make = _families()[fam_idx]
+    params, storage = make(n_txns, seed)
+    bparams = _bytecode_block(prog, order, params)
+    vm, cfg = BC.vm_and_config([prog], n_txns, spec.n_locs, window=window)
+    # exact op counts never exceed the DSL spec's (possibly padded) slot bounds
+    assert cfg.max_reads <= spec.max_reads, name
+    assert cfg.max_writes <= spec.max_writes, name
+    res_bc = run_block(vm, bparams, storage, cfg)
+    assert bool(res_bc.committed), name
+    res_dsl = run_block(dsl_prog, params, storage, cfg)
+    exp = run_sequential(dsl_prog, params, storage, n_txns)
+    np.testing.assert_array_equal(np.asarray(res_bc.snapshot), exp)
+    np.testing.assert_array_equal(np.asarray(res_dsl.snapshot),
+                                  np.asarray(res_bc.snapshot))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_txns=st.integers(6, 40), seed=st.integers(0, 2**16),
+       window=st.sampled_from([1, 8, 32]),
+       backend=st.sampled_from(["sorted", "dense"]),
+       ratios=st.sampled_from([(1, 1, 1), (4, 1, 1), (1, 1, 6), (0.2, 1, 0.2)]))
+def test_mixed_block_equivalence(n_txns, seed, window, backend, ratios):
+    """Heterogeneous blocks (the case Dickerson/Anjana-style access-spec STMs
+    cannot express): engine snapshot == sequential OracleCtx ground truth."""
+    spec = W.MixedSpec(p2p=W.P2PSpec(n_accounts=6),
+                       indirect=W.IndirectSpec(n_slots=5),
+                       admission=W.AdmissionSpec(n_tenants=2, n_groups=4,
+                                                 total_pages=64,
+                                                 quota_per_tenant=48),
+                       ratios=ratios)
+    vm, params, storage, cfg = W.make_mixed_block(spec, n_txns, seed=seed,
+                                                  window=window,
+                                                  backend=backend)
+    res = run_block(vm, params, storage, cfg)
+    assert bool(res.committed), "engine hit wave cap without committing"
+    exp = run_sequential(vm, params, storage, n_txns)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), exp)
+
+
+def test_mixed_zero_recompiles():
+    """ONE jitted executor serves every contract mix: the jit cache holds a
+    single entry after arbitrarily many different mixes (the compile-once
+    serving path)."""
+    n = 32
+    mixes = [(1, 1, 1), (10, 1, 1), (1, 10, 1), (1, 1, 10), (0, 1, 1)]
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(ratios=mixes[0]), n, seed=0)
+    run = make_executor(vm, cfg)
+    for i, ratios in enumerate(mixes):
+        vm_i, params_i, storage_i, cfg_i = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), n, seed=i)
+        assert cfg_i == cfg  # same static config => same compiled program
+        res = run(params_i, storage_i)
+        assert bool(res.committed)
+        exp = run_sequential(vm, params_i, storage_i, n)
+        np.testing.assert_array_equal(np.asarray(res.snapshot), exp)
+    assert run._cache_size() == 1, \
+        f"expected exactly one compilation, cache has {run._cache_size()}"
+
+
+def test_mixed_block_interleaves_all_families():
+    vm, params, storage, cfg = W.make_mixed_block(W.MixedSpec(), 64, seed=3)
+    codes = np.asarray(params["code"])
+    # at least two distinct programs actually present in the block
+    assert len({codes[i].tobytes() for i in range(64)}) == 3
+
+
+def test_chain_of_mixed_blocks():
+    """run_chain works unchanged with the bytecode VM (per-block code arrays)."""
+    from repro.core.engine import run_chain
+    spec = W.MixedSpec(p2p=W.P2PSpec(n_accounts=20))
+    n_txns, n_blocks = 24, 3
+    blocks = []
+    for b in range(n_blocks):
+        vm, params, storage0, cfg = W.make_mixed_block(spec, n_txns,
+                                                       seed=200 + b)
+        blocks.append(params)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    final, results = jax.jit(
+        lambda bp, st: run_chain(vm, bp, st, cfg))(stacked, storage0)
+    assert bool(np.asarray(results.committed).all())
+    state = np.asarray(storage0)
+    for b in range(n_blocks):
+        state = run_sequential(vm, blocks[b], state, n_txns)
+    np.testing.assert_array_equal(np.asarray(final), state)
+
+
+# ---------------------------------------------------------------------------
+# ISA / assembler unit tests
+# ---------------------------------------------------------------------------
+
+def test_assembler_counts_and_padding():
+    a = Assembler()
+    x = a.param(0)
+    y = a.read(x)
+    a.write(x, a.add(y, a.imm(1)))
+    prog = a.build(pad_to=16)
+    assert prog.code.shape == (16, 4)
+    assert prog.n_reads == 1 and prog.n_writes == 1 and prog.n_params == 1
+    assert prog.code[-1, 0] == isa.HALT
+    with pytest.raises(ValueError):
+        prog.padded(2)  # never truncate
+
+
+def test_halt_stops_execution():
+    """Ops after HALT must have no effect (pad rows are dead)."""
+    a = Assembler()
+    loc = a.imm(0)
+    a.write(loc, a.imm(7))
+    a.halt()
+    prog = a.build()
+    # hand-append a rogue write after HALT
+    rogue = np.array([[isa.WRITE, loc, loc, isa.ALWAYS]], np.int32)
+    code = np.concatenate([prog.code, rogue])
+    vm = BytecodeVM(n_regs=prog.n_regs)
+    params = {"code": jnp.asarray(code[None]), "args": jnp.zeros((1, 1), jnp.int32)}
+    storage = jnp.zeros(3, jnp.int32)
+    cfg = W.EngineConfig(n_txns=1, n_locs=3, max_reads=1, max_writes=2,
+                         window=1)
+    res = run_block(vm, params, storage, cfg)
+    assert bool(res.committed)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), [7, 0, 0])
+
+
+def test_select_and_masked_write():
+    """SELECT + enable-masked WRITE: the disabled branch leaves storage."""
+    a = Assembler()
+    cond = a.param(0)
+    picked = a.select(cond, a.imm(111), a.imm(222))
+    a.write(a.imm(0), picked)
+    a.write(a.imm(1), a.imm(5), enable=cond)     # masked on cond
+    prog = a.build()
+    vm = BytecodeVM(n_regs=prog.n_regs)
+    cfg = W.EngineConfig(n_txns=2, n_locs=2, max_reads=1,
+                         max_writes=prog.n_writes, window=2)
+    code = np.broadcast_to(prog.code[None], (2,) + prog.code.shape)
+    params = {"code": jnp.asarray(np.ascontiguousarray(code)),
+              "args": jnp.asarray([[1], [0]], jnp.int32)}
+    storage = jnp.full((2,), -3, jnp.int32)
+    res = run_block(vm, params, storage, cfg)
+    # txn0 (cond=1) writes 111 then txn1 (cond=0) overwrites with 222;
+    # loc 1 written only by txn0.
+    np.testing.assert_array_equal(np.asarray(res.snapshot), [222, 5])
+    exp = run_sequential(vm, params, storage, 2)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), exp)
+
+
+def test_slot_overflow_fails_loudly():
+    """A program with more READ ops than cfg.max_reads must NOT commit a
+    (potentially unsound) snapshot: the incarnation self-blocks and the
+    engine stalls to its wave cap with committed=False."""
+    a = Assembler()
+    loc = a.imm(1)
+    a.read(loc)
+    a.read(loc)      # second READ overflows max_reads=1
+    a.write(loc, a.imm(3))
+    prog = a.build()
+    vm = BytecodeVM(n_regs=prog.n_regs)
+    cfg = W.EngineConfig(n_txns=1, n_locs=4, max_reads=1, max_writes=1,
+                         window=1, max_waves=6)
+    params = {"code": jnp.asarray(prog.code[None]),
+              "args": jnp.zeros((1, 1), jnp.int32)}
+    res = run_block(vm, params, jnp.zeros(4, jnp.int32), cfg)
+    assert not bool(res.committed)
+
+
+def test_disassemble_roundtrip_smoke():
+    prog = BC.compile_admission(W.AdmissionSpec(n_tenants=2, n_groups=2,
+                                                total_pages=8,
+                                                quota_per_tenant=8))
+    text = prog.disassemble()
+    assert "READ" in text and "WRITE" in text and "HALT" in text

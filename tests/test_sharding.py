@@ -85,6 +85,8 @@ def test_walker_flops_match_cost_analysis_without_loops():
                 jax.ShapeDtypeStruct((256, 64), jnp.float32)).compile()
     t = H.aggregate(c.as_text())
     ca = c.cost_analysis()
+    if isinstance(ca, list):  # older jax returns a one-element list
+        ca = ca[0]
     assert abs(t["flops"] - ca["flops"]) / ca["flops"] < 0.05
 
 
