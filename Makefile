@@ -1,14 +1,24 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
-.PHONY: test bench-smoke bench
+.PHONY: test test-fast bench-smoke bench bench-baselines
 
 test:
 	$(PY) -m pytest -x -q
 
+# Tier-1 subset: no hypothesis search — property tests draw at most 2
+# deterministic examples each (see tests/_hypo.py).
+test-fast:
+	REPRO_FAST_EXAMPLES=2 $(PY) -m pytest -x -q
+
 # Fast perf record: mixed-contract bytecode block through one jitted executor.
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload mixed --fast
+
+# Four-engine comparison grid (sequential/Block-STM/Bohm/LiTM on mixed
+# blocks) + branch-free-ALU A/B -> BENCH_baselines.json.
+bench-baselines:
+	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload baselines --fast
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast

@@ -10,14 +10,20 @@ One function per paper figure:
   bytecode / mixed             (beyond-paper: interpreter overhead vs the
                                 traced DSL, and heterogeneous blocks served by
                                 ONE jitted executor with zero recompiles)
+  baselines                    (the paper's comparison as a four-engine grid:
+                                sequential / Block-STM / Bohm / LiTM on the
+                                SAME heterogeneous mixed blocks through the
+                                unified executor protocol, swept over conflict
+                                rate × contract mix; plus the branch-free-ALU
+                                vs ``lax.switch`` interpreter A/B)
 
 CPU wall-clock replaces the paper's 32-core Rust numbers; the comparable
 quantities are the *shapes* of the curves and the abort/incarnation
 statistics, which are hardware-independent.  Results go to CSV; the bytecode
-suites additionally emit a ``BENCH_bytecode.json`` perf record at the repo
-root (tps + recompile counts).
+suites additionally emit ``BENCH_bytecode.json`` / ``BENCH_baselines.json``
+perf records at the repo root (tps + recompile counts).
 
-  PYTHONPATH=src python -m benchmarks.engine_bench --workload mixed --fast
+  PYTHONPATH=src python -m benchmarks.engine_bench --workload baselines --fast
 """
 from __future__ import annotations
 
@@ -36,6 +42,12 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 DIEM = dict(cfg_reads=W.CHAIN_CFG_READS_DIEM)      # 21 reads / 4 writes
 APTOS = dict(cfg_reads=W.CHAIN_CFG_READS_APTOS)    # 8 reads / 5 writes
+
+# One shared block size per mode for the four-engine grid, so
+# BENCH_baselines.json is comparable no matter which CLI path produced it
+# (LiTM is O(n^2) under contention, hence smaller than the single-engine
+# suites' FAST_N/FULL_N below).
+BASELINES_FAST_N, BASELINES_FULL_N = 192, 512
 
 
 def _run_engine(spec, n_txns, window, seed=0, reps=3, backend="sorted",
@@ -68,40 +80,40 @@ def _run_sequential(spec, n_txns, seed=0):
     return dict(tps=n_txns / t, seconds=t)
 
 
+def _timed(fn, args, reps=2):
+    """Compile/warm once, then median wall-clock of ``reps`` runs."""
+    res = fn(*args)
+    res.snapshot.block_until_ready()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = fn(*args)
+        res.snapshot.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return res, float(np.median(times))
+
+
 def _run_bohm(spec, n_txns, window, seed=0):
     """Bohm [21] with perfect write sets (real implementation,
     core/baselines.py): dependency-exact fork-join schedule, zero wasted
     executions.  Write-set extraction (the information the paper grants Bohm
     'artificially') is excluded from the timing, as in the paper."""
-    import jax
     from repro.core import baselines as B
     cfg = W.p2p_engine_config(spec, n_txns, window=window)
     params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
     pws = B.perfect_write_sets(W.p2p_program(spec), params, storage, cfg)
-    run = jax.jit(lambda p, s: B.run_bohm(W.p2p_program(spec), p, s, cfg,
-                                          pws))
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    t0 = time.perf_counter()
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    t = time.perf_counter() - t0
+    run = B.make_baseline_executor("bohm", W.p2p_program(spec), cfg)
+    _, t = _timed(run, (params, storage, pws), reps=1)
     return dict(tps=n_txns / t, seconds=t)
 
 
 def _run_litm(spec, n_txns, seed=0):
     """LiTM [52]-style deterministic STM rounds (core/baselines.py)."""
-    import jax
     from repro.core import baselines as B
     cfg = W.p2p_engine_config(spec, n_txns)
     params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
-    run = jax.jit(lambda p, s: B.run_litm(W.p2p_program(spec), p, s, cfg))
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    t0 = time.perf_counter()
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    t = time.perf_counter() - t0
+    run = B.make_baseline_executor("litm", W.p2p_program(spec), cfg)
+    res, t = _timed(run, (params, storage), reps=1)
     return dict(tps=n_txns / t, seconds=t, execs=int(res.execs))
 
 
@@ -177,12 +189,14 @@ def bench_backends(rows, n_txns=512, accounts=200):
 # Bytecode VM suites (beyond paper: programs as data, compile-once serving)
 # ---------------------------------------------------------------------------
 
-def _run_bytecode_p2p(spec, n_txns, window, seed=0, reps=3):
+def _run_bytecode_p2p(spec, n_txns, window, seed=0, reps=3,
+                      dispatch="gather"):
     """Homogeneous p2p block through the bytecode interpreter: isolates the
     interpretation overhead vs the traced DSL (same engine, same schedule)."""
     from repro.bytecode import compile as BC
     prog = BC.compile_p2p(spec)
-    vm, cfg = BC.vm_and_config([prog], n_txns, spec.n_locs, window=window)
+    vm, cfg = BC.vm_and_config([prog], n_txns, spec.n_locs, window=window,
+                               dispatch=dispatch)
     run = make_executor(vm, cfg)
 
     def block(s):
@@ -221,6 +235,93 @@ def bench_bytecode(rows, n_txns=512, accounts=1000, record=None):
         record["p2p_dsl_tps"] = dsl["tps"]
         record["p2p_bytecode_tps"] = bc["tps"]
         record["interp_overhead_x"] = dsl["tps"] / bc["tps"]
+    bench_alu(rows, n_txns=n_txns, accounts=accounts, record=record)
+
+
+def bench_alu(rows, n_txns=512, accounts=1000, record=None):
+    """Interpreter fast-path A/B: branch-free gather/select ALU (default)
+    vs the legacy one-``lax.switch``-branch-per-opcode dispatch, on identical
+    homogeneous p2p bytecode blocks (same engine, same schedule)."""
+    spec = W.P2PSpec(n_accounts=accounts)
+    r = {}
+    for dispatch in ("switch", "gather"):
+        r[dispatch] = _run_bytecode_p2p(spec, n_txns, window=32, reps=5,
+                                        dispatch=dispatch)
+        rows.append((f"alu_{dispatch}", r[dispatch]["seconds"] * 1e6 / n_txns,
+                     f"tps={r[dispatch]['tps']:.0f}"))
+    speedup = r["switch"]["seconds"] / r["gather"]["seconds"]
+    rows.append(("alu_gather_speedup", speedup,
+                 f"branch_free_vs_switch={speedup:.2f}x"))
+    if record is not None:
+        record["alu_n_txns"] = n_txns
+        record["alu_switch_tps"] = r["switch"]["tps"]
+        record["alu_gather_tps"] = r["gather"]["tps"]
+        record["alu_gather_speedup_x"] = speedup
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Four-engine comparison grid (paper §4.1 on mixed blocks, unified protocol)
+# ---------------------------------------------------------------------------
+
+def _baseline_mixed_spec(contention, ratios):
+    """Conflict rate via shared-universe size (paper Fig. 4's axis)."""
+    if contention == "high":
+        return W.MixedSpec(
+            p2p=W.P2PSpec(n_accounts=8),
+            indirect=W.IndirectSpec(n_slots=8),
+            admission=W.AdmissionSpec(n_tenants=2, n_groups=4,
+                                      total_pages=10**6,
+                                      quota_per_tenant=10**6),
+            ratios=ratios)
+    return W.MixedSpec(
+        p2p=W.P2PSpec(n_accounts=1000),
+        indirect=W.IndirectSpec(n_slots=500),
+        admission=W.AdmissionSpec(n_tenants=16, n_groups=64,
+                                  total_pages=10**6, quota_per_tenant=10**5),
+        ratios=ratios)
+
+
+def bench_baselines(rows, n_txns=BASELINES_FAST_N, reps=2, record=None):
+    """The paper's comparison, finally on our richest workload: sequential /
+    Block-STM / Bohm / LiTM over conflict rate × contract mix, all four
+    engines executing the SAME heterogeneous bytecode blocks through the
+    unified executor protocol.  Per contention level each engine compiles
+    once and serves every mix (the compile-once property now covers the
+    baselines too)."""
+    from repro.core import baselines as B
+    mixes = [("even", (1, 1, 1)), ("p2p_heavy", (8, 1, 1)),
+             ("admission_heavy", (1, 1, 8))]
+    grid = {}
+    for contention in ("high", "low"):
+        vm, params, storage, cfg = W.make_mixed_block(
+            _baseline_mixed_spec(contention, mixes[0][1]), n_txns, seed=0)
+        run_bstm = make_executor(vm, cfg)
+        run_bohm = B.make_baseline_executor("bohm", vm, cfg)
+        run_litm = B.make_baseline_executor("litm", vm, cfg)
+        for mname, ratios in mixes:
+            _, params, storage, _ = W.make_mixed_block(
+                _baseline_mixed_spec(contention, ratios), n_txns, seed=7)
+            pws = B.perfect_write_sets(vm, params, storage, cfg)
+            t0 = time.perf_counter()
+            run_sequential(vm, params, storage, n_txns)
+            seq_t = time.perf_counter() - t0
+            cell = {"sequential": dict(tps=n_txns / seq_t)}
+            for ename, fn, fargs in (
+                    ("blockstm", run_bstm, (params, storage)),
+                    ("bohm", run_bohm, (params, storage, pws)),
+                    ("litm", run_litm, (params, storage))):
+                res, t = _timed(fn, fargs, reps=reps)
+                assert bool(res.committed), (contention, mname, ename)
+                cell[ename] = dict(tps=n_txns / t, execs=int(res.execs))
+            grid[f"{contention}_{mname}"] = cell
+            rows.append((f"baselines_{contention}_{mname}",
+                         cell["blockstm"]["tps"],
+                         ";".join(f"{e}_tps={c['tps']:.0f}"
+                                  for e, c in cell.items())))
+    if record is not None:
+        record["grid_n_txns"] = n_txns
+        record["grid"] = grid
 
 
 def bench_mixed(rows, n_txns=512, reps=3, record=None):
@@ -271,14 +372,18 @@ def bench_mixed(rows, n_txns=512, reps=3, record=None):
         record["recompiles_after_first"] = (cache - 1) if cache else None
 
 
-def write_bytecode_record(record, path=None):
+def write_record(record, suite, filename):
     record = dict(record)
-    record["suite"] = "bytecode"
-    path = path or os.path.join(_REPO_ROOT, "BENCH_bytecode.json")
+    record["suite"] = suite
+    path = os.path.join(_REPO_ROOT, filename)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
         f.write("\n")
     return path
+
+
+def write_bytecode_record(record):
+    return write_record(record, "bytecode", "BENCH_bytecode.json")
 
 
 # One shared block size per mode, so BENCH_bytecode.json is comparable no
@@ -299,6 +404,13 @@ def run_all(fast: bool = True):
     bench_bytecode(rows, n_txns=n, record=record)
     bench_mixed(rows, n_txns=n, record=record)
     write_bytecode_record(record)
+    baselines_record: dict = {}
+    bench_baselines(rows, n_txns=BASELINES_FAST_N if fast else
+                    BASELINES_FULL_N, record=baselines_record)
+    # the ALU A/B already ran inside bench_bytecode: reuse its numbers
+    baselines_record.update({k: v for k, v in record.items()
+                             if k.startswith("alu_")})
+    write_record(baselines_record, "baselines", "BENCH_baselines.json")
     return rows
 
 
@@ -306,7 +418,7 @@ def main() -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--workload", default="all",
-                    choices=["all", "p2p", "mixed", "bytecode"])
+                    choices=["all", "p2p", "mixed", "bytecode", "baselines"])
     ap.add_argument("--fast", action="store_true", default=True)
     ap.add_argument("--full", dest="fast", action="store_false")
     args = ap.parse_args()
@@ -324,6 +436,11 @@ def main() -> None:
     elif args.workload == "mixed":
         bench_mixed(rows, n_txns=n, record=record)
         write_bytecode_record(record)
+    elif args.workload == "baselines":
+        bench_baselines(rows, n_txns=BASELINES_FAST_N if args.fast else
+                        BASELINES_FULL_N, record=record)
+        bench_alu(rows, n_txns=n, record=record)
+        write_record(record, "baselines", "BENCH_baselines.json")
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -7,7 +7,8 @@ interpreted inside the wave engine, so ONE jitted executor serves arbitrary
 mixes of contracts with zero recompiles:
 
 * :mod:`repro.bytecode.isa`       — the register mini-ISA (opcodes, encoding)
-* :mod:`repro.bytecode.interp`    — ``lax.scan``/``lax.switch`` interpreter
+* :mod:`repro.bytecode.interp`    — ``lax.scan`` interpreter with a
+  branch-free gather/select ALU (``lax.switch`` only for READ/WRITE)
 * :mod:`repro.bytecode.assembler` — builder API emitting ``Program`` objects
 * :mod:`repro.bytecode.compile`   — lowerings of the three DSL workloads
 

@@ -131,6 +131,18 @@ class Assembler:
     def and_(self, x: int, y: int) -> int:
         return self._binop(isa.AND, x, y)
 
+    def div(self, x: int, y: int) -> int:
+        """Floor division; division by zero yields 0."""
+        return self._binop(isa.DIV, x, y)
+
+    def mod(self, x: int, y: int) -> int:
+        """Floor modulo (sign of divisor); modulo by zero yields 0."""
+        return self._binop(isa.MOD, x, y)
+
+    def hash_(self, x: int, y: int) -> int:
+        """murmur3-style int32 mix of (x, y) — see ``isa.hash_mix``."""
+        return self._binop(isa.HASH, x, y)
+
     def select(self, cond: int, x: int, y: int) -> int:
         """r <- regs[cond] != 0 ? regs[x] : regs[y] (non-destructive)."""
         r = self.mov(cond)

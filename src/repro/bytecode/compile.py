@@ -88,6 +88,39 @@ def compile_admission(spec: AdmissionSpec, loc_base: int = 0) -> Program:
     return a.build()
 
 
+def compile_admission_hashed(spec: AdmissionSpec, loc_base: int = 0,
+                             salt: int = 17) -> Program:
+    """Admission with HASH/MOD key derivation done *in bytecode*.
+
+    The tenant-quota and group-count slots are derived from the raw ids via
+    ``hash_mix(id, salt) mod n`` — the admission-style key derivation
+    (sharding an id universe onto a fixed slot table) that previously needed
+    host-side precomputation because the ISA had no DIV/MOD/HASH.  No DSL
+    counterpart exists; the sequential ``BytecodeVM.__call__`` oracle is the
+    ground truth (see ``tests/test_conformance.py``).
+    """
+    from repro.bytecode import isa
+
+    a = Assembler()
+    head = a.read(a.imm(loc_base))             # free-list head (hot!)
+    tenant, group, pages = a.param(0), a.param(1), a.param(2)
+    salt_r = a.imm(isa.signed32(salt))
+    tslot = a.mod(a.hash_(tenant, salt_r), a.imm(spec.n_tenants))
+    used_loc = a.add(tslot, a.imm(loc_base + 1))
+    used = a.read(used_loc)
+    gslot = a.mod(a.hash_(group, salt_r), a.imm(spec.n_groups))
+    grp_loc = a.add(gslot, a.imm(loc_base + 1 + spec.n_tenants))
+    grp = a.read(grp_loc)
+    new_head = a.add(head, pages)
+    new_used = a.add(used, pages)
+    fits = a.and_(a.le(new_head, a.imm(spec.total_pages)),
+                  a.le(new_used, a.imm(spec.quota_per_tenant)))
+    a.write(a.imm(loc_base), new_head, enable=fits)
+    a.write(used_loc, new_used, enable=fits)
+    a.write(grp_loc, a.add(grp, pages), enable=fits)
+    return a.build()
+
+
 # ---------------------------------------------------------------------------
 # Block assembly helpers
 # ---------------------------------------------------------------------------
@@ -112,6 +145,7 @@ def homogeneous_block_params(prog: Program, args: np.ndarray) -> dict:
 
 
 def vm_and_config(progs: list[Program], n_txns: int, n_locs: int,
+                  dispatch: str = "gather",
                   **cfg_kw) -> tuple[BytecodeVM, EngineConfig]:
     """Interpreter + engine config sized for the union of ``progs``."""
     cfg = EngineConfig(
@@ -119,7 +153,7 @@ def vm_and_config(progs: list[Program], n_txns: int, n_locs: int,
         max_reads=max(p.n_reads for p in progs),
         max_writes=max(p.n_writes for p in progs),
         **cfg_kw)
-    vm = BytecodeVM(n_regs=max(p.n_regs for p in progs))
+    vm = BytecodeVM(n_regs=max(p.n_regs for p in progs), dispatch=dispatch)
     return vm, cfg
 
 

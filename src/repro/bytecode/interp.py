@@ -1,4 +1,4 @@
-"""Bytecode interpreter: one ``lax.scan`` over ops, ``lax.switch`` dispatch.
+"""Bytecode interpreter: one ``lax.scan`` over ops, branch-free ALU dispatch.
 
 :class:`BytecodeVM` runs a transaction whose *program is data* — the txn's
 params carry ``code`` ``(L, 4)`` int32 and ``args`` ``(P,)`` int32 — inside
@@ -15,11 +15,22 @@ the same two harnesses as the Python DSL programs of :mod:`repro.core.vm`:
   :class:`~repro.core.vm.OracleCtx`, so ``run_sequential`` accepts a
   :class:`BytecodeVM` directly as the ground-truth reference.
 
-Cost model: a wave executes ``window`` txns × ``L`` ops; under ``vmap`` the
-``lax.switch`` lowers to computing every opcode's branch and selecting
-per-lane — the standard price of SIMD-interpreting heterogeneous programs.
-Branches are O(max_reads + max_writes) scalar work, so a wave is
-O(window · L · (R + W)) plus one MV resolve per READ op.
+Dispatch (``dispatch='gather'``, the default): pure register ops
+(:data:`isa.ALU_OPS`) do NOT go through ``lax.switch``.  Every step computes
+the small vector of all ALU candidate results from the gathered operands and
+selects one by opcode — a gather/select ALU with a single register-file
+scatter.  ``lax.switch`` is reserved for the ops with side effects beyond the
+register file (READ / WRITE, 3 branches incl. the no-op).  Under ``vmap`` a
+switch lowers to computing every branch and selecting per lane, so shrinking
+the branch set from one-per-opcode to 3 removes ~13 register-file scatters
+per executed op — the interpreter fast-path (measured in
+``benchmarks/engine_bench.py --workload bytecode``; record:
+``BENCH_baselines.json``).  ``dispatch='switch'`` keeps the original
+one-branch-per-opcode ``lax.switch`` as the measured baseline.
+
+Cost model: a wave executes ``window`` txns × ``L`` ops; each op costs one
+O(#ALU_OPS) candidate vector + one scatter, plus the READ/WRITE branches'
+O(max_reads + max_writes) scalar work and one MV resolve per READ op.
 """
 from __future__ import annotations
 
@@ -27,9 +38,48 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.bytecode import isa
 from repro.core.types import NO_LOC, STORAGE, EngineConfig, ExecResult
+
+_DISPATCH_MODES = ("gather", "switch")
+
+# opcode -> slot in the ALU candidate vector; -1 marks non-ALU ops (memory /
+# control), which leave the register file untouched on the ALU path.
+_ALU_SLOT = np.full((isa.N_OPCODES,), -1, np.int32)
+for _i, _op in enumerate(isa.ALU_OPS):
+    _ALU_SLOT[_op] = _i
+
+
+def _div(x, y):
+    """Floor division with DIV-by-zero -> 0 (int32, wrap on INT_MIN / -1)."""
+    safe_y = jnp.where((y == 0) | (y == -1), 1, y)
+    q = jnp.floor_divide(x, safe_y)
+    q = jnp.where(y == -1, -x, q)          # -x wraps INT_MIN like Python _i32
+    return jnp.where(y == 0, 0, q)
+
+
+def _mod(x, y):
+    """Floor modulo (sign of divisor) with MOD-by-zero -> 0."""
+    safe_y = jnp.where((y == 0) | (y == -1), 1, y)   # x mod ±1 == 0
+    return jnp.where(y == 0, 0, jnp.remainder(x, safe_y))
+
+
+def _hash(x, y):
+    """murmur3-style finalizer over (x, y); bit-identical to isa.hash_mix."""
+    i32 = jnp.int32
+    c1 = jnp.asarray(isa.signed32(isa.HASH_C1), i32)
+    c2 = jnp.asarray(isa.signed32(isa.HASH_C2), i32)
+    c3 = jnp.asarray(isa.signed32(isa.HASH_C3), i32)
+    srl = jax.lax.shift_right_logical
+    h = x.astype(i32) ^ (y.astype(i32) * c1)
+    h = h ^ srl(h, 16)
+    h = h * c2
+    h = h ^ srl(h, 13)
+    h = h * c3
+    h = h ^ srl(h, 16)
+    return h
 
 
 class _VMState(NamedTuple):
@@ -52,13 +102,19 @@ class BytecodeVM:
     """Interpreter for ``(code, args)`` transactions.
 
     ``n_regs`` is the static register-file size (>= max register index + 1
-    across every program that may appear in a block).
+    across every program that may appear in a block).  ``dispatch`` selects
+    the arithmetic dispatch strategy: ``'gather'`` (branch-free ALU, default)
+    or ``'switch'`` (legacy one-``lax.switch``-branch-per-opcode baseline).
     """
 
-    def __init__(self, n_regs: int):
+    def __init__(self, n_regs: int, dispatch: str = "gather"):
         if n_regs < 1:
             raise ValueError("n_regs must be >= 1")
+        if dispatch not in _DISPATCH_MODES:
+            raise ValueError(f"dispatch must be one of {_DISPATCH_MODES}, "
+                             f"got {dispatch!r}")
         self.n_regs = n_regs
+        self.dispatch = dispatch
 
     # -- speculative path (wave engine) -------------------------------------
     def execute_spec(self, cfg: EngineConfig, txn_idx: jax.Array, resolver,
@@ -77,17 +133,11 @@ class BytecodeVM:
         def set_reg(st, i, v):
             return st._replace(regs=st.regs.at[creg(i)].set(v.astype(vdt)))
 
+        def op_noop(st, a, b, c):
+            return st
+
         def op_halt(st, a, b, c):
             return st._replace(done=jnp.asarray(True))
-
-        def op_load_param(st, a, b, c):
-            return set_reg(st, a, args[jnp.clip(b, 0, args.shape[0] - 1)])
-
-        def op_load_imm(st, a, b, c):
-            return set_reg(st, a, b.astype(vdt))
-
-        def op_mov(st, a, b, c):
-            return set_reg(st, a, st.regs[creg(b)])
 
         def op_read(st, a, b, c):
             loc = st.regs[creg(b)].astype(jnp.int32)
@@ -134,37 +184,74 @@ class BytecodeVM:
                 w=st.w + 1,
             )
 
-        def alu(fn):
-            def op(st, a, b, c):
-                return set_reg(st, a, fn(st.regs[creg(b)], st.regs[creg(c)]))
-            return op
+        # ONE semantics table serves both dispatch modes: each entry maps the
+        # gathered operands (x=r[b], y=r[c], sel=r[a], b=raw field) to the
+        # destination value.  Order/membership comes from isa.ALU_OPS alone.
+        alu_fns = {
+            isa.LOAD_PARAM: lambda x, y, sel, b:
+                args[jnp.clip(b, 0, args.shape[0] - 1)],
+            isa.LOAD_IMM: lambda x, y, sel, b: b.astype(vdt),
+            isa.MOV: lambda x, y, sel, b: x,
+            isa.ADD: lambda x, y, sel, b: x + y,
+            isa.SUB: lambda x, y, sel, b: x - y,
+            isa.MUL: lambda x, y, sel, b: x * y,
+            isa.GE: lambda x, y, sel, b: (x >= y).astype(vdt),
+            isa.LE: lambda x, y, sel, b: (x <= y).astype(vdt),
+            isa.AND: lambda x, y, sel, b: ((x != 0) & (y != 0)).astype(vdt),
+            isa.SELECT: lambda x, y, sel, b: jnp.where(sel != 0, x, y),
+            isa.DIV: lambda x, y, sel, b: _div(x, y),
+            isa.MOD: lambda x, y, sel, b: _mod(x, y),
+            isa.HASH: lambda x, y, sel, b: _hash(x, y),
+        }
+        assert set(alu_fns) == set(isa.ALU_OPS)
 
-        def op_select(st, a, b, c):
-            cond = st.regs[creg(a)] != 0
-            return set_reg(st, a, jnp.where(cond, st.regs[creg(b)],
-                                            st.regs[creg(c)]))
+        def alu_operands(st, a, b, c):
+            return st.regs[creg(b)], st.regs[creg(c)], st.regs[creg(a)], b
 
-        branches = [None] * isa.N_OPCODES
-        branches[isa.HALT] = op_halt
-        branches[isa.LOAD_PARAM] = op_load_param
-        branches[isa.LOAD_IMM] = op_load_imm
-        branches[isa.MOV] = op_mov
-        branches[isa.READ] = op_read
-        branches[isa.WRITE] = op_write
-        branches[isa.ADD] = alu(lambda x, y: x + y)
-        branches[isa.SUB] = alu(lambda x, y: x - y)
-        branches[isa.MUL] = alu(lambda x, y: x * y)
-        branches[isa.GE] = alu(lambda x, y: (x >= y).astype(vdt))
-        branches[isa.LE] = alu(lambda x, y: (x <= y).astype(vdt))
-        branches[isa.AND] = alu(lambda x, y: ((x != 0) & (y != 0)).astype(vdt))
-        branches[isa.SELECT] = op_select
+        def alu_apply(st, op, a, b, c):
+            x, y, sel, b = alu_operands(st, a, b, c)
+            cands = jnp.stack([alu_fns[o](x, y, sel, b).astype(vdt)
+                               for o in isa.ALU_OPS])
+            slot = jnp.asarray(_ALU_SLOT)[op]
+            is_alu = slot >= 0
+            out = cands[jnp.clip(slot, 0, cands.shape[0] - 1)]
+            dst = creg(a)
+            return st._replace(regs=st.regs.at[dst].set(
+                jnp.where(is_alu, out, st.regs[dst]).astype(vdt)))
 
-        def step(st: _VMState, row):
+        def step_gather(st: _VMState, row):
             op, a, b, c = row[0], row[1], row[2], row[3]
             # undefined opcode traps to HALT (never silently runs another op)
             op = jnp.where((op >= 0) & (op < isa.N_OPCODES), op, isa.HALT)
-            new = jax.lax.switch(op, branches, st, a, b, c)
+            new = alu_apply(st, op, a, b, c)          # no-op for non-ALU ops
+            mem = jnp.where(op == isa.READ, 1,
+                            jnp.where(op == isa.WRITE, 2, 0))
+            new = jax.lax.switch(mem, [op_noop, op_read, op_write],
+                                 new, a, b, c)
+            new = new._replace(done=new.done | (op == isa.HALT))
             # everything after HALT is a no-op (state passes through unchanged)
+            active = ~st.done
+            st = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(active, n, o), new, st)
+            return st, None
+
+        def alu_branch(fn):
+            def op(st, a, b, c):
+                x, y, sel, braw = alu_operands(st, a, b, c)
+                return set_reg(st, a, fn(x, y, sel, braw))
+            return op
+
+        branches = [None] * isa.N_OPCODES
+        branches[isa.HALT] = op_halt
+        branches[isa.READ] = op_read
+        branches[isa.WRITE] = op_write
+        for _opcode in isa.ALU_OPS:
+            branches[_opcode] = alu_branch(alu_fns[_opcode])
+
+        def step_switch(st: _VMState, row):
+            op, a, b, c = row[0], row[1], row[2], row[3]
+            op = jnp.where((op >= 0) & (op < isa.N_OPCODES), op, isa.HALT)
+            new = jax.lax.switch(op, branches, st, a, b, c)
             active = ~st.done
             st = jax.tree_util.tree_map(
                 lambda n, o: jnp.where(active, n, o), new, st)
@@ -181,6 +268,7 @@ class BytecodeVM:
             blocked=jnp.asarray(False), blocker=jnp.asarray(-1, jnp.int32),
             done=jnp.asarray(False),
         )
+        step = step_gather if self.dispatch == "gather" else step_switch
         st, _ = jax.lax.scan(step, init, code)
         # Slot overflow (more executed READ/WRITE ops than the engine config
         # provisions) would have clamped onto the last slot, dropping records
@@ -203,7 +291,10 @@ class BytecodeVM:
         Malformed operands are clamped exactly as in ``execute_spec`` so the
         two harnesses never diverge, even on hand-authored bytecode.
         """
-        import numpy as np
+        self._interp(p, ctx)
+
+    def _interp(self, p, ctx) -> list:
+        """``__call__`` body; returns the final register file (golden tests)."""
         code = np.asarray(p["code"])
         args = np.asarray(p["args"])
         regs = [0] * self.n_regs
@@ -245,8 +336,17 @@ class BytecodeVM:
                 regs[cr(a)] = int(regs[cr(b)] != 0 and regs[cr(c)] != 0)
             elif op == isa.SELECT:
                 regs[cr(a)] = regs[cr(b)] if regs[cr(a)] != 0 else regs[cr(c)]
+            elif op == isa.DIV:
+                y = regs[cr(c)]
+                regs[cr(a)] = 0 if y == 0 else _i32(regs[cr(b)] // y)
+            elif op == isa.MOD:
+                y = regs[cr(c)]
+                regs[cr(a)] = 0 if y == 0 else _i32(regs[cr(b)] % y)
+            elif op == isa.HASH:
+                regs[cr(a)] = isa.hash_mix(regs[cr(b)], regs[cr(c)])
             else:
                 break  # undefined opcode traps to HALT, as in execute_spec
+        return regs
 
 
 def _i32(x: int) -> int:

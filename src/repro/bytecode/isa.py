@@ -18,6 +18,8 @@ Operand conventions (see README.md for the full table):
   GE/LE       r[a] = r[b] >= r[c]  (resp. <=), as 0/1
   AND         r[a] = (r[b] != 0) & (r[c] != 0), as 0/1
   SELECT      r[a] = r[a] != 0 ? r[b] : r[c]
+  DIV/MOD     r[a] = r[b] floordiv/floormod r[c]; by-zero yields 0
+  HASH        r[a] = mix32(r[b], r[c])  (murmur3-style finalizer, see hash_mix)
 
 ``READ``/``WRITE`` are the only externally-visible ops: they consume one
 read/write slot each time they execute (whether or not their enable mask is
@@ -40,17 +42,51 @@ GE = 9
 LE = 10
 AND = 11
 SELECT = 12
+DIV = 13
+MOD = 14
+HASH = 15
 
-N_OPCODES = 13
+N_OPCODES = 16
 
 ALWAYS = -1        # enable-operand sentinel: unconditionally enabled
 N_FIELDS = 4       # [op, a, b, c]
+
+# Pure register->register ops: exactly the set the interpreter's branch-free
+# gather/select ALU dispatches (everything except HALT and the memory ops).
+ALU_OPS = (LOAD_PARAM, LOAD_IMM, MOV, ADD, SUB, MUL, GE, LE, AND, SELECT,
+           DIV, MOD, HASH)
 
 MNEMONICS = {
     HALT: "HALT", LOAD_PARAM: "LOAD_PARAM", LOAD_IMM: "LOAD_IMM", MOV: "MOV",
     READ: "READ", WRITE: "WRITE", ADD: "ADD", SUB: "SUB", MUL: "MUL",
     GE: "GE", LE: "LE", AND: "AND", SELECT: "SELECT",
+    DIV: "DIV", MOD: "MOD", HASH: "HASH",
 }
+
+# HASH is a murmur3-style finalizer over the pair (r[b], r[c]): good enough
+# dispersion for key derivation (tenant -> quota slot) while staying pure
+# int32 wrap-around arithmetic, so the JAX and Python interpreters agree
+# bit-for-bit.  Constants are the murmur3/golden-ratio mix constants.
+HASH_C1 = 0x9E3779B1
+HASH_C2 = 0x85EBCA6B
+HASH_C3 = 0xC2B2AE35
+
+
+def signed32(v: int) -> int:
+    """Reinterpret an arbitrary int as a two's-complement signed int32."""
+    return ((int(v) & 0xFFFFFFFF) ^ 0x80000000) - 0x80000000
+
+
+def hash_mix(x: int, y: int) -> int:
+    """Reference HASH semantics (pure Python, uint32 arithmetic, signed out)."""
+    M = 0xFFFFFFFF
+    h = ((x & M) ^ ((y * HASH_C1) & M)) & M
+    h ^= h >> 16
+    h = (h * HASH_C2) & M
+    h ^= h >> 13
+    h = (h * HASH_C3) & M
+    h ^= h >> 16
+    return signed32(h)
 
 
 def disassemble(code) -> str:

@@ -15,19 +15,26 @@
   at low conflict, degrades at high conflict — the behavior the paper
   contrasts against.
 
-Both produce the preset-order-equivalent final state (tested), so all three
-systems are comparable on identical blocks.
+Both produce the preset-order-equivalent final state (tested), so all four
+engines (sequential / Block-STM / Bohm / LiTM) are comparable on identical
+blocks.  Execution dispatches through the shared executor protocol
+(:mod:`repro.core.executor`), so the baselines run Python-DSL blocks AND
+heterogeneous bytecode/mixed blocks from the same code path as the wave
+engine — the paper's comparison grid extends to ``make_mixed_block``
+workloads unchanged (see ``tests/test_conformance.py`` and
+``benchmarks/engine_bench.py --workload baselines``).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+import functools
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import mvindex
+from repro.core import executor, mvindex
 from repro.core.types import NO_LOC, EngineConfig
-from repro.core.vm import SpecCtx, TxnProgram
+from repro.core.vm import TxnProgram
 
 
 class BaselineResult(NamedTuple):
@@ -42,24 +49,18 @@ def _exec_all(program, params, storage, cfg, write_locs, write_vals,
     """Execute every txn against the current partial state (vmapped).
 
     Reads resolve against committed/executed lower txns only (like MVMemory
-    restricted to final values)."""
-    index = mvindex.build_index(
-        jnp.where(executed[:, None], write_locs, NO_LOC), cfg.n_txns)
-    estimate = jnp.zeros((cfg.n_txns,), jnp.bool_)
+    restricted to final values); dispatch is the shared executor protocol,
+    so DSL and bytecode programs both run here."""
+    resolver = executor.committed_resolver(write_locs, executed, incarnation,
+                                           cfg)
+    return executor.execute_txns(program, params, storage, cfg, resolver,
+                                 write_vals)
 
-    def resolver(loc, reader):
-        return mvindex.resolve(index, estimate, incarnation, loc, reader)
 
-    def value_reader(res, loc):
-        return mvindex.resolve_value(write_vals, storage, res, loc)
-
-    def exec_one(txn_idx, p):
-        ctx = SpecCtx(cfg, txn_idx, resolver, value_reader)
-        program(p, ctx)
-        return ctx.result()
-
-    ids = jnp.arange(cfg.n_txns, dtype=jnp.int32)
-    return jax.vmap(exec_one)(ids, params)
+def _snapshot(write_locs, write_vals, executed, incarnation, storage, cfg):
+    resolver = executor.committed_resolver(write_locs, executed, incarnation,
+                                           cfg)
+    return executor.read_snapshot(resolver, write_vals, storage, cfg)
 
 
 def run_bohm(program: TxnProgram, params: Any, storage: jax.Array,
@@ -68,6 +69,10 @@ def run_bohm(program: TxnProgram, params: Any, storage: jax.Array,
     """Bohm with perfect write sets. ``perfect_write_locs``: (n, W) int32
     true write locations (from the sequential oracle pre-pass)."""
     n = cfg.n_txns
+    # The perfect-write-set index is static across rounds: build it once and
+    # let the while-loop close over it.
+    perfect_index = mvindex.build_index(perfect_write_locs, n)
+    no_estimates = jnp.zeros((n,), jnp.bool_)
 
     def cond(state):
         _, _, executed, _, rounds, _ = state
@@ -83,14 +88,19 @@ def run_bohm(program: TxnProgram, params: Any, storage: jax.Array,
                         executed, incarnation)
         # ready: all lower writers of every location actually read have run
         read_locs = res.read_locs                              # (n, R)
-        writers = jax.vmap(jax.vmap(
-            lambda loc, reader: mvindex.resolve(
-                mvindex.build_index(perfect_write_locs, n),
-                jnp.zeros((n,), jnp.bool_), incarnation, loc, reader).writer
-        ))(read_locs, jnp.broadcast_to(
-            jnp.arange(n, dtype=jnp.int32)[:, None], read_locs.shape))
+
+        def last_perfect_writer(loc, reader):
+            return mvindex.resolve(perfect_index, no_estimates, incarnation,
+                                   loc, reader).writer
+
+        writers = jax.vmap(jax.vmap(last_perfect_writer))(
+            read_locs, jnp.broadcast_to(
+                jnp.arange(n, dtype=jnp.int32)[:, None], read_locs.shape))
         dep_ok = (writers < 0) | executed[jnp.clip(writers, 0, n - 1)]
-        ready = dep_ok.all(axis=1) & ~executed
+        # res.blocked marks malformed executions (e.g. bytecode slot
+        # overflow): never treat them as ready, so the round cap trips and
+        # committed=False, matching the wave engine's fail-loudly semantics.
+        ready = dep_ok.all(axis=1) & ~executed & ~res.blocked
         sel = lambda m, a, b: jnp.where(m[:, None] if a.ndim == 2 else m,
                                         a, b)
         return (sel(ready, res.write_locs, write_locs),
@@ -142,7 +152,7 @@ def run_litm(program: TxnProgram, params: Any, storage: jax.Array,
         readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                                    foot.shape)
         conflicted = jax.vmap(jax.vmap(lower_writer))(foot, readers)
-        commit = pending & ~conflicted.any(axis=1)
+        commit = pending & ~conflicted.any(axis=1) & ~res.blocked
         sel = lambda m, a, b: jnp.where(m[:, None] if a.ndim == 2 else m,
                                         a, b)
         return (sel(commit, res.write_locs, write_locs),
@@ -165,23 +175,34 @@ def run_litm(program: TxnProgram, params: Any, storage: jax.Array,
                           committed=executed.all())
 
 
-def _snapshot(write_locs, write_vals, executed, incarnation, storage, cfg):
-    index = mvindex.build_index(
-        jnp.where(executed[:, None], write_locs, NO_LOC), cfg.n_txns)
-    estimate = jnp.zeros((cfg.n_txns,), jnp.bool_)
-    reader = jnp.asarray(cfg.n_txns, jnp.int32)
+def make_baseline_executor(kind: str, program: TxnProgram,
+                           cfg: EngineConfig) -> Callable:
+    """Jitted baseline executor, mirroring ``engine.make_executor``.
 
-    def read_final(loc):
-        res = mvindex.resolve(index, estimate, incarnation, loc, reader)
-        return mvindex.resolve_value(write_vals, storage, res, loc)
-
-    return jax.vmap(read_final)(jnp.arange(cfg.n_locs, dtype=jnp.int32))
+    ``bohm``: ``(params, storage, perfect_write_locs) -> BaselineResult``;
+    ``litm``: ``(params, storage) -> BaselineResult``.  Like the wave
+    engine's executor, ONE compilation serves every block with the same
+    static config — including every contract mix of a bytecode block
+    (property-tested via the jit cache in ``tests/test_conformance.py``).
+    """
+    if kind == "bohm":
+        @functools.partial(jax.jit, donate_argnums=())
+        def run(params, storage, perfect_write_locs):
+            return run_bohm(program, params, storage, cfg, perfect_write_locs)
+    elif kind == "litm":
+        @functools.partial(jax.jit, donate_argnums=())
+        def run(params, storage):
+            return run_litm(program, params, storage, cfg)
+    else:
+        raise ValueError(f"unknown baseline kind {kind!r}")
+    return run
 
 
 def perfect_write_sets(program: TxnProgram, params: Any, storage,
                        cfg: EngineConfig) -> jax.Array:
     """Oracle pre-pass: true write locations per txn (what the paper grants
-    Bohm 'artificially')."""
+    Bohm 'artificially').  Runs the program's sequential (``__call__``)
+    representation, so DSL and bytecode programs both work."""
     import numpy as np
     from repro.core.vm import OracleCtx, unstack_params
     plist = unstack_params(params, cfg.n_txns)

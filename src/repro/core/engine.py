@@ -24,10 +24,10 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import mvindex
+from repro.core import executor, mvindex
 from repro.core.types import (NO_LOC, STORAGE, BlockResult, EngineConfig,
                               EngineState, ExecResult)
-from repro.core.vm import SpecCtx, TxnProgram
+from repro.core.vm import TxnProgram
 
 
 def _init_state(cfg: EngineConfig) -> EngineState:
@@ -101,30 +101,16 @@ def _execute_wave(state: EngineState, active_ids: jax.Array,
                   cfg: EngineConfig) -> ExecResult:
     """vmap the VM over the wave; reads resolve against the wave-start index.
 
-    Two program representations share this path:
-      * Python-DSL programs (``(params, ctx) -> None``) run under ``SpecCtx``,
-        whose read/write slots are static call sites.
-      * Objects exposing ``execute_spec(cfg, txn_idx, resolver, value_reader,
-        p) -> ExecResult`` (e.g. :class:`repro.bytecode.interp.BytecodeVM`)
-        manage their own slot accounting — programs are per-txn *data*
-        (``p['code']``), so one jitted executor serves heterogeneous blocks.
+    Dispatch over program representations (Python-DSL vs bytecode
+    ``execute_spec`` objects) lives in the shared executor protocol
+    (:func:`repro.core.vm.make_exec_one` via
+    :func:`repro.core.executor.execute_txns`), which the Bohm/LiTM baselines
+    use as well — one code path executes DSL and heterogeneous bytecode
+    blocks under every engine.
     """
     resolver = _make_resolver(state, cfg)
-
-    def value_reader(res, loc):
-        return mvindex.resolve_value(state.write_vals, storage, res, loc)
-
-    execute_spec = getattr(program, "execute_spec", None)
-
-    def exec_one(txn_idx, p):
-        if execute_spec is not None:
-            return execute_spec(cfg, txn_idx, resolver, value_reader, p)
-        ctx = SpecCtx(cfg, txn_idx, resolver, value_reader)
-        program(p, ctx)
-        return ctx.result()
-
-    p_active = jax.tree_util.tree_map(lambda a: a[active_ids], params)
-    return jax.vmap(exec_one)(active_ids, p_active)
+    return executor.execute_txns(program, params, storage, cfg, resolver,
+                                 state.write_vals, active_ids)
 
 
 def _apply_results(state: EngineState, active_ids: jax.Array,
@@ -250,17 +236,9 @@ def _wave_step(state: EngineState, program: TxnProgram, params: Any,
 
 def _snapshot(state: EngineState, storage: jax.Array,
               cfg: EngineConfig) -> jax.Array:
-    """MVMemory.snapshot (paper L55-61): highest writer per location, else
-    pre-block storage."""
-    resolver = _make_resolver(state, cfg)
-    locs = jnp.arange(cfg.n_locs, dtype=jnp.int32)
-    reader = jnp.asarray(cfg.n_txns, jnp.int32)
-
-    def read_final(loc):
-        res = resolver(loc, reader)
-        return mvindex.resolve_value(state.write_vals, storage, res, loc)
-
-    return jax.vmap(read_final)(locs)
+    """MVMemory.snapshot over the engine's backend-selected resolver."""
+    return executor.read_snapshot(_make_resolver(state, cfg),
+                                  state.write_vals, storage, cfg)
 
 
 def run_block(program: TxnProgram, params: Any, storage: jax.Array,

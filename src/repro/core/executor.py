@@ -1,0 +1,127 @@
+"""Unified executor protocol: one execution/snapshot path for every engine.
+
+The paper's headline claim is *comparative* — Block-STM vs Bohm-style
+deterministic re-execution vs LiTM-style batched STM on identical blocks
+(§4.1).  For the comparison to be meaningful here, all engines must execute
+transactions through the same VM dispatch and read committed state through
+the same multi-version resolution.  This module is that shared layer:
+
+* :func:`execute_txns`      — vmapped speculative execution of a set of txns
+                              against an arbitrary resolver (the wave engine
+                              passes its MV view; baselines pass a
+                              committed-prefix view).  Dispatches through
+                              :func:`repro.core.vm.make_exec_one`, so DSL and
+                              bytecode/mixed blocks run everywhere.
+* :func:`committed_resolver`— read resolution restricted to a boolean mask of
+                              live (committed/executed) transactions: MVMemory
+                              with final values only, which is exactly the
+                              read view of Bohm rounds, LiTM rounds, and both
+                              engines' final snapshots.
+* :func:`read_snapshot`     — MVMemory.snapshot (paper L55-61) over any
+                              resolver: highest live writer per location, else
+                              pre-block storage.
+* :func:`run_engine`        — name-indexed front-end over the four engines
+                              (``sequential`` / ``blockstm`` / ``bohm`` /
+                              ``litm``) used by the differential conformance
+                              suite and the benchmark grid.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mvindex
+from repro.core.types import NO_LOC, EngineConfig
+from repro.core.vm import TxnProgram, make_exec_one
+
+#: Engine names accepted by :func:`run_engine`.
+ENGINES = ("sequential", "blockstm", "bohm", "litm")
+
+
+def execute_txns(program: TxnProgram, params: Any, storage: jax.Array,
+                 cfg: EngineConfig, resolver, write_vals: jax.Array,
+                 txn_ids: jax.Array | None = None):
+    """vmap one speculative incarnation of each txn in ``txn_ids``.
+
+    Reads resolve through ``resolver``; resolved MV hits gather their value
+    from ``write_vals``, misses fall back to ``storage``.  Out-of-bounds ids
+    (= n_txns fill lanes from the wave selection) produce garbage lanes that
+    the caller masks.  ``txn_ids=None`` executes the whole block without
+    gathering the params pytree (the baselines call this every round — the
+    gather would be an identity copy of every array, code tensors included).
+    """
+    def value_reader(res, loc):
+        return mvindex.resolve_value(write_vals, storage, res, loc)
+
+    exec_one = make_exec_one(program, cfg, resolver, value_reader)
+    if txn_ids is None:
+        return jax.vmap(exec_one)(jnp.arange(cfg.n_txns, dtype=jnp.int32),
+                                  params)
+    p_sel = jax.tree_util.tree_map(lambda a: a[txn_ids], params)
+    return jax.vmap(exec_one)(txn_ids, p_sel)
+
+
+def committed_resolver(write_locs: jax.Array, live: jax.Array,
+                       incarnation: jax.Array, cfg: EngineConfig):
+    """Resolver over the write sets of ``live`` transactions only.
+
+    This is MVMemory restricted to final values — no ESTIMATEs, so reads
+    never block.  Baseline rounds and snapshots both read through it.
+    """
+    index = mvindex.build_index(
+        jnp.where(live[:, None], write_locs, NO_LOC), cfg.n_txns)
+    no_estimates = jnp.zeros((cfg.n_txns,), jnp.bool_)
+
+    def resolver(loc, reader):
+        return mvindex.resolve(index, no_estimates, incarnation, loc, reader)
+
+    return resolver
+
+
+def read_snapshot(resolver, write_vals: jax.Array, storage: jax.Array,
+                  cfg: EngineConfig) -> jax.Array:
+    """MVMemory.snapshot (paper L55-61): read every location as txn ``n``."""
+    reader = jnp.asarray(cfg.n_txns, jnp.int32)
+
+    def read_final(loc):
+        res = resolver(loc, reader)
+        return mvindex.resolve_value(write_vals, storage, res, loc)
+
+    return jax.vmap(read_final)(jnp.arange(cfg.n_locs, dtype=jnp.int32))
+
+
+def run_engine(name: str, program: TxnProgram, params: Any,
+               storage: jax.Array, cfg: EngineConfig, *,
+               perfect_write_locs: jax.Array | None = None):
+    """Run one block under the named engine.
+
+    Returns ``(snapshot, committed, stats)`` where ``stats`` is a small dict
+    of engine-specific counters.  For ``bohm``, the oracle write-set pre-pass
+    runs automatically unless ``perfect_write_locs`` is supplied (the paper
+    grants Bohm the sets 'artificially'; so do we).
+    """
+    if name == "sequential":
+        from repro.core.vm import run_sequential
+        snap = run_sequential(program, params, storage, cfg.n_txns)
+        return jnp.asarray(snap), jnp.asarray(True), {}
+    if name == "blockstm":
+        from repro.core.engine import run_block
+        res = run_block(program, params, storage, cfg)
+        return res.snapshot, res.committed, {
+            "execs": res.execs, "waves": res.waves,
+            "dep_aborts": res.dep_aborts, "val_aborts": res.val_aborts}
+    from repro.core import baselines
+    if name == "bohm":
+        if perfect_write_locs is None:
+            perfect_write_locs = baselines.perfect_write_sets(
+                program, params, storage, cfg)
+        res = baselines.run_bohm(program, params, storage, cfg,
+                                 perfect_write_locs)
+    elif name == "litm":
+        res = baselines.run_litm(program, params, storage, cfg)
+    else:
+        raise ValueError(f"unknown engine {name!r}; expected one of {ENGINES}")
+    return res.snapshot, res.committed, {
+        "execs": res.execs, "rounds": res.rounds}

@@ -10,18 +10,25 @@ enabled=...)`` calls.  Read addresses may depend on previously read values
 the two properties that distinguish Block-STM's setting from Bohm/Calvin, which
 assume write sets are known up front.
 
-The same program runs in three harnesses:
+The same program runs in two harnesses:
 
 * ``SpecCtx``     — speculative JAX execution inside the wave engine (vmapped).
                     Reads resolve against MVMemory; ESTIMATE hits set the
                     ``blocked`` flag (paper: READ_ERROR -> add_dependency).
 * ``OracleCtx``   — plain-Python sequential execution (the reference the paper
                     itself validates against).
-* shape probing   — ``count_slots`` traces the program once to check R/W bounds.
 
 Because the *number of textual read()/write() call sites is static*, slot
 indices are Python ints: the recorded read/write sets are fixed-shape arrays
 with NO_LOC padding, which is what makes the whole engine vmappable.
+
+Executor protocol: every engine (wave, Bohm, LiTM) executes transactions
+through :func:`make_exec_one`, which dispatches on the program representation:
+objects exposing ``execute_spec(cfg, txn_idx, resolver, value_reader, p) ->
+ExecResult`` (e.g. :class:`repro.bytecode.interp.BytecodeVM`) manage their own
+slot accounting — programs are per-txn *data* — while plain callables
+``(params, ctx) -> None`` run under :class:`SpecCtx` with static slot call
+sites.  Block-level helpers live in :mod:`repro.core.executor`.
 """
 from __future__ import annotations
 
@@ -34,6 +41,33 @@ from repro.core import mvindex
 from repro.core.types import NO_LOC, STORAGE, EngineConfig, ExecResult
 
 TxnProgram = Callable[..., None]  # (params, ctx) -> None
+
+
+def make_exec_one(program: "TxnProgram", cfg: EngineConfig, resolver,
+                  value_reader) -> Callable:
+    """The executor protocol's single dispatch point.
+
+    Returns ``exec_one(txn_idx, p) -> ExecResult`` executing ONE speculative
+    incarnation against the multi-version view exposed by ``resolver`` /
+    ``value_reader``.  Both program representations are served:
+
+    * objects with ``execute_spec`` (bytecode VMs: programs are per-txn data),
+    * plain Python-DSL callables, traced under :class:`SpecCtx`.
+
+    Every engine — the Block-STM wave loop, Bohm, LiTM — builds its per-wave
+    executors through this function, so heterogeneous blocks run everywhere
+    the moment a program representation implements the protocol.
+    """
+    execute_spec = getattr(program, "execute_spec", None)
+    if execute_spec is not None:
+        def exec_one(txn_idx, p):
+            return execute_spec(cfg, txn_idx, resolver, value_reader, p)
+    else:
+        def exec_one(txn_idx, p):
+            ctx = SpecCtx(cfg, txn_idx, resolver, value_reader)
+            program(p, ctx)
+            return ctx.result()
+    return exec_one
 
 
 class SpecCtx:

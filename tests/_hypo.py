@@ -6,12 +6,26 @@ just the surface these tests use — ``given``/``settings`` and the
 ``sampled_from``/``integers``/``floats`` strategies — drawing ``max_examples``
 pseudo-random samples from a per-test deterministic seed.  No shrinking, no
 database; with real hypothesis installed this module is a pass-through.
+
+``REPRO_FAST_EXAMPLES=<k>`` caps ``max_examples`` at ``k`` in both modes —
+the ``make test-fast`` tier-1 subset (deterministic, no hypothesis search).
 """
 from __future__ import annotations
 
+import os
+
+_FAST_CAP = int(os.environ.get("REPRO_FAST_EXAMPLES", "0") or "0")
+
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings as _hyp_settings, strategies as st
     HAVE_HYPOTHESIS = True
+
+    if _FAST_CAP > 0:
+        def settings(max_examples: int = 10, **kw):
+            return _hyp_settings(
+                max_examples=min(max_examples, _FAST_CAP), **kw)
+    else:
+        settings = _hyp_settings
 except ImportError:
     HAVE_HYPOTHESIS = False
 
@@ -59,6 +73,8 @@ except ImportError:
             def wrapper():
                 n = getattr(wrapper, "_max_examples",
                             getattr(fn, "_max_examples", 10))
+                if _FAST_CAP > 0:
+                    n = min(n, _FAST_CAP)
                 rng = random.Random(zlib.crc32(fn.__name__.encode()))
                 for _ in range(n):
                     drawn = {k: s.draw(rng) for k, s in strats.items()}

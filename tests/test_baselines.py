@@ -1,54 +1,83 @@
 """Baseline engines (paper §4.1 comparisons): Bohm (perfect write sets) and
-LiTM-style deterministic STM — correctness + behavioral properties."""
+LiTM-style deterministic STM — correctness + behavioral properties.
+
+Every test runs through the unified executor protocol
+(``repro.core.executor.run_engine``) and is parametrized over BOTH program
+substrates: the traced Python DSL and the bytecode VM (``compile_p2p`` +
+``BytecodeVM``), which exercise the protocol's two dispatch arms.
+"""
 import jax
 import numpy as np
 from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
+from repro.bytecode import compile as BC
 from repro.core import baselines as B
 from repro.core import workloads as W
-from repro.core.vm import run_sequential
+from repro.core.executor import run_engine
 
 jax.config.update("jax_platform_name", "cpu")
 
+SUBSTRATES = ("dsl", "bytecode")
 
-def _block(acc, n, seed):
+
+def _block(substrate, acc, n, seed):
+    """(program, params, storage, cfg) for one p2p block on either substrate."""
     spec = W.P2PSpec(n_accounts=acc)
     params, storage = W.make_p2p_block(spec, n, seed=seed)
-    cfg = W.p2p_engine_config(spec, n)
-    return spec, params, storage, cfg
+    if substrate == "dsl":
+        return W.p2p_program(spec), params, storage, W.p2p_engine_config(spec, n)
+    prog = BC.compile_p2p(spec)
+    args = BC.pack_args({k: np.asarray(v) for k, v in params.items()},
+                        BC.P2P_ARGS, prog.n_params)
+    vm, cfg = BC.vm_and_config([prog], n, spec.n_locs)
+    return vm, BC.homogeneous_block_params(prog, args), storage, cfg
 
 
 @settings(max_examples=10, deadline=None)
-@given(acc=st.sampled_from([2, 10, 100]), n=st.integers(4, 40),
+@given(substrate=st.sampled_from(SUBSTRATES),
+       acc=st.sampled_from([2, 10, 100]), n=st.integers(4, 40),
        seed=st.integers(0, 1000))
-def test_bohm_equivalence(acc, n, seed):
-    spec, params, storage, cfg = _block(acc, n, seed)
-    pws = B.perfect_write_sets(W.p2p_program(spec), params, storage, cfg)
-    r = B.run_bohm(W.p2p_program(spec), params, storage, cfg, pws)
-    assert bool(r.committed)
-    exp = run_sequential(W.p2p_program(spec), params, storage, n)
-    np.testing.assert_array_equal(np.asarray(r.snapshot), exp)
+def test_bohm_equivalence(substrate, acc, n, seed):
+    program, params, storage, cfg = _block(substrate, acc, n, seed)
+    exp, _, _ = run_engine("sequential", program, params, storage, cfg)
+    snap, committed, stats = run_engine("bohm", program, params, storage, cfg)
+    assert bool(committed), substrate
+    np.testing.assert_array_equal(np.asarray(snap), np.asarray(exp))
     # perfect write sets => every txn executes exactly once
-    assert int(r.execs) == n
+    assert int(stats["execs"]) == n
 
 
 @settings(max_examples=10, deadline=None)
-@given(acc=st.sampled_from([2, 10, 100]), n=st.integers(4, 40),
+@given(substrate=st.sampled_from(SUBSTRATES),
+       acc=st.sampled_from([2, 10, 100]), n=st.integers(4, 40),
        seed=st.integers(0, 1000))
-def test_litm_equivalence(acc, n, seed):
-    spec, params, storage, cfg = _block(acc, n, seed)
-    r = B.run_litm(W.p2p_program(spec), params, storage, cfg)
-    assert bool(r.committed)
-    exp = run_sequential(W.p2p_program(spec), params, storage, n)
-    np.testing.assert_array_equal(np.asarray(r.snapshot), exp)
+def test_litm_equivalence(substrate, acc, n, seed):
+    program, params, storage, cfg = _block(substrate, acc, n, seed)
+    snap, committed, _ = run_engine("litm", program, params, storage, cfg)
+    assert bool(committed), substrate
+    exp, _, _ = run_engine("sequential", program, params, storage, cfg)
+    np.testing.assert_array_equal(np.asarray(snap), np.asarray(exp))
 
 
-def test_litm_degrades_under_contention_vs_bohm():
+@settings(max_examples=4, deadline=None)
+@given(substrate=st.sampled_from(SUBSTRATES), seed=st.integers(0, 100))
+def test_litm_degrades_under_contention_vs_bohm(substrate, seed):
     """The paper's qualitative contrast: LiTM re-executes heavily under
-    contention; Bohm never wastes an execution."""
-    spec, params, storage, cfg = _block(2, 48, seed=1)
-    pws = B.perfect_write_sets(W.p2p_program(spec), params, storage, cfg)
-    rb = B.run_bohm(W.p2p_program(spec), params, storage, cfg, pws)
-    rl = B.run_litm(W.p2p_program(spec), params, storage, cfg)
-    assert int(rb.execs) == 48
-    assert int(rl.execs) > 5 * 48     # quadratic re-execution blowup
+    contention; Bohm never wastes an execution.  Holds on both substrates."""
+    program, params, storage, cfg = _block(substrate, 2, 48, seed)
+    _, bohm_ok, bohm_stats = run_engine("bohm", program, params, storage, cfg)
+    _, litm_ok, litm_stats = run_engine("litm", program, params, storage, cfg)
+    assert bool(bohm_ok) and bool(litm_ok)
+    assert int(bohm_stats["execs"]) == 48
+    assert int(litm_stats["execs"]) > 5 * 48     # quadratic re-execution blowup
+
+
+def test_perfect_write_sets_both_substrates_agree():
+    """The oracle pre-pass sees through both program representations."""
+    for substrate in SUBSTRATES:
+        program, params, storage, cfg = _block(substrate, 10, 12, seed=5)
+        pws = np.asarray(B.perfect_write_sets(program, params, storage, cfg))
+        if substrate == "dsl":
+            ref = pws
+    # identical blocks => identical true write sets, up to slot padding
+    np.testing.assert_array_equal(np.sort(ref, axis=1), np.sort(pws, axis=1))

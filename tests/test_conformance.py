@@ -1,0 +1,146 @@
+"""Differential conformance: all four engines, one committed snapshot.
+
+The bytecode analogue of ``test_engine_equivalence.py``, run through the
+unified executor protocol (``repro.core.executor.run_engine``): sequential,
+Block-STM, Bohm (perfect write sets), and LiTM must commit byte-identical
+snapshots on random heterogeneous ``make_mixed_block`` workloads across
+seeds, block sizes, contract mixes, and conflict rates — the property that
+makes the paper's comparison grid (§4.1) meaningful on our richest workload.
+
+Also here: the interpreter-dispatch A/B property (branch-free gather ALU ≡
+legacy ``lax.switch``) and the compile-once property extended to the
+baselines (the jit cache of the Bohm/LiTM executors does not grow across
+contract mixes).
+"""
+import jax
+import numpy as np
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
+
+from repro.bytecode import BytecodeVM
+from repro.bytecode import compile as BC
+from repro.core import baselines as B
+from repro.core import workloads as W
+from repro.core.engine import run_block
+from repro.core.executor import ENGINES, run_engine
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Conflict rate is set by the size of the shared-location universes: tiny
+# account/slot/tenant pools make nearly every transaction conflict, large
+# pools almost none (paper Fig. 4's contention axis).
+_CONTENTION = {
+    "high": W.MixedSpec(
+        p2p=W.P2PSpec(n_accounts=3),
+        indirect=W.IndirectSpec(n_slots=3),
+        admission=W.AdmissionSpec(n_tenants=2, n_groups=2, total_pages=64,
+                                  quota_per_tenant=48)),
+    "low": W.MixedSpec(
+        p2p=W.P2PSpec(n_accounts=64),
+        indirect=W.IndirectSpec(n_slots=48),
+        admission=W.AdmissionSpec(n_tenants=12, n_groups=16,
+                                  total_pages=10**6,
+                                  quota_per_tenant=10**5)),
+}
+
+
+def _mixed(n_txns, seed, ratios, contention, window=8):
+    import dataclasses
+    spec = dataclasses.replace(_CONTENTION[contention], ratios=ratios)
+    return W.make_mixed_block(spec, n_txns, seed=seed, window=window)
+
+
+def _assert_all_engines_agree(vm, params, storage, cfg, msg=""):
+    ref, _, _ = run_engine("sequential", vm, params, storage, cfg)
+    # one oracle pre-pass shared by the bohm run (as the paper shares it)
+    pws = B.perfect_write_sets(vm, params, storage, cfg)
+    for name in ("blockstm", "bohm", "litm"):
+        snap, committed, _ = run_engine(name, vm, params, storage, cfg,
+                                        perfect_write_locs=pws)
+        assert bool(committed), f"{name} failed to commit {msg}"
+        np.testing.assert_array_equal(
+            np.asarray(snap), np.asarray(ref),
+            err_msg=f"{name} diverged from sequential {msg}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_txns=st.sampled_from([6, 14, 26]), seed=st.integers(0, 2**16),
+       ratios=st.sampled_from([(1, 1, 1), (4, 1, 1), (1, 4, 1), (1, 1, 4)]),
+       contention=st.sampled_from(["high", "low"]))
+def test_four_engines_identical_snapshots(n_txns, seed, ratios, contention):
+    """sequential == blockstm == bohm == litm on random mixed blocks."""
+    vm, params, storage, cfg = _mixed(n_txns, seed, ratios, contention)
+    _assert_all_engines_agree(
+        vm, params, storage, cfg,
+        msg=f"(n={n_txns} seed={seed} ratios={ratios} {contention})")
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), n_txns=st.sampled_from([8, 20]))
+def test_dispatch_modes_agree(seed, n_txns):
+    """Branch-free gather ALU ≡ legacy lax.switch dispatch, engine-level."""
+    vm, params, storage, cfg = _mixed(n_txns, seed, (1, 1, 1), "high")
+    assert vm.dispatch == "gather"
+    res_g = run_block(vm, params, storage, cfg)
+    res_s = run_block(BytecodeVM(vm.n_regs, dispatch="switch"),
+                      params, storage, cfg)
+    assert bool(res_g.committed) and bool(res_s.committed)
+    np.testing.assert_array_equal(np.asarray(res_g.snapshot),
+                                  np.asarray(res_s.snapshot))
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**16), n_txns=st.sampled_from([6, 18]))
+def test_hashed_admission_conformance(seed, n_txns):
+    """HASH/MOD key derivation in bytecode: all four engines agree.
+
+    ``compile_admission_hashed`` has no DSL counterpart (the derivation used
+    to require host-side precomputation), so the sequential interpretation of
+    the SAME bytecode is the ground truth.
+    """
+    spec = W.AdmissionSpec(n_tenants=3, n_groups=5, total_pages=64,
+                           quota_per_tenant=40)
+    prog = BC.compile_admission_hashed(spec)
+    params, storage = W.make_admission_block(spec, n_txns, seed=seed)
+    args = BC.pack_args({k: np.asarray(v) for k, v in params.items()},
+                        BC.ADMISSION_ARGS, prog.n_params)
+    bparams = BC.homogeneous_block_params(prog, args)
+    vm, cfg = BC.vm_and_config([prog], n_txns, spec.n_locs, window=4)
+    _assert_all_engines_agree(vm, bparams, storage, cfg,
+                              msg=f"(hashed admission seed={seed})")
+
+
+def test_engines_registry_complete():
+    assert ENGINES == ("sequential", "blockstm", "bohm", "litm")
+    import pytest
+    with pytest.raises(ValueError):
+        run_engine("calvin", lambda p, ctx: None, {}, np.zeros(1),
+                   W.EngineConfig(n_txns=1, n_locs=1, max_reads=1,
+                                  max_writes=1))
+
+
+def test_baseline_executors_zero_recompile():
+    """Compile-once extends to the baselines: re-running Bohm/LiTM on a
+    different p2p/indirect/admission ratio must NOT grow the jit cache."""
+    n = 24
+    mixes = [(1, 1, 1), (5, 1, 1), (1, 5, 1), (1, 1, 5), (0, 1, 1)]
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(ratios=mixes[0]), n, seed=0)
+    bohm = B.make_baseline_executor("bohm", vm, cfg)
+    litm = B.make_baseline_executor("litm", vm, cfg)
+    for i, ratios in enumerate(mixes):
+        _, params_i, storage_i, cfg_i = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), n, seed=i)
+        assert cfg_i == cfg  # same static config => same compiled program
+        ref, _, _ = run_engine("sequential", vm, params_i, storage_i, cfg)
+        pws = B.perfect_write_sets(vm, params_i, storage_i, cfg)
+        rb = bohm(params_i, storage_i, pws)
+        rl = litm(params_i, storage_i)
+        assert bool(rb.committed) and bool(rl.committed)
+        np.testing.assert_array_equal(np.asarray(rb.snapshot),
+                                      np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(rl.snapshot),
+                                      np.asarray(ref))
+    assert bohm._cache_size() == 1, \
+        f"bohm recompiled: cache has {bohm._cache_size()} entries"
+    assert litm._cache_size() == 1, \
+        f"litm recompiled: cache has {litm._cache_size()} entries"
