@@ -1,7 +1,7 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
-.PHONY: test test-fast bench-smoke bench bench-baselines
+.PHONY: test test-fast bench-smoke bench bench-baselines bench-shards
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,6 +19,11 @@ bench-smoke:
 # blocks) + branch-free-ALU A/B -> BENCH_baselines.json.
 bench-baselines:
 	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload baselines --fast
+
+# Sharded MV backend grid (n_locs x n_shards x zipf_s, up to 10M locations)
+# -> BENCH_shards.json.
+bench-shards:
+	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload shards --fast
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast

@@ -4,8 +4,8 @@ Scheduler + MVMemory + VM (paper Algorithms 1-5) re-derived for SIMD hardware
 as a bulk-synchronous wave engine — see DESIGN.md §2 for the mapping.
 """
 from repro.core.engine import make_executor, run_block, run_chain
-from repro.core.types import BlockResult, EngineConfig
+from repro.core.types import BlockResult, BlockStats, EngineConfig
 from repro.core.vm import run_sequential
 
 __all__ = ["make_executor", "run_block", "run_chain", "BlockResult",
-           "EngineConfig", "run_sequential"]
+           "BlockStats", "EngineConfig", "run_sequential"]

@@ -32,7 +32,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import executor, mvindex
+from repro.core import executor, mv
 from repro.core.types import NO_LOC, EngineConfig
 from repro.core.vm import TxnProgram
 
@@ -70,8 +70,9 @@ def run_bohm(program: TxnProgram, params: Any, storage: jax.Array,
     true write locations (from the sequential oracle pre-pass)."""
     n = cfg.n_txns
     # The perfect-write-set index is static across rounds: build it once and
-    # let the while-loop close over it.
-    perfect_index = mvindex.build_index(perfect_write_locs, n)
+    # let the while-loop close over it (MV backend per cfg, like the engine).
+    backend = mv.make_backend(cfg)
+    perfect_index = backend.build(perfect_write_locs)
     no_estimates = jnp.zeros((n,), jnp.bool_)
 
     def cond(state):
@@ -89,9 +90,11 @@ def run_bohm(program: TxnProgram, params: Any, storage: jax.Array,
         # ready: all lower writers of every location actually read have run
         read_locs = res.read_locs                              # (n, R)
 
+        perfect_resolver = backend.make_resolver(
+            perfect_index, perfect_write_locs, no_estimates, incarnation)
+
         def last_perfect_writer(loc, reader):
-            return mvindex.resolve(perfect_index, no_estimates, incarnation,
-                                   loc, reader).writer
+            return perfect_resolver(loc, reader).writer
 
         writers = jax.vmap(jax.vmap(last_perfect_writer))(
             read_locs, jnp.broadcast_to(
@@ -139,14 +142,16 @@ def run_litm(program: TxnProgram, params: Any, storage: jax.Array,
                         executed, incarnation)
         pending = ~executed
         # conflict: does any lower PENDING txn write a location in my
-        # read+write footprint?  (sorted last-pending-writer lookup)
+        # read+write footprint?  (last-pending-writer lookup through the
+        # cfg-selected MV backend)
+        backend = mv.make_backend(cfg)
         pend_writes = jnp.where(pending[:, None], res.write_locs, NO_LOC)
-        index = mvindex.build_index(pend_writes, n)
-        zeros = jnp.zeros((n,), jnp.bool_)
+        pend_resolver = backend.make_resolver(
+            backend.build(pend_writes), pend_writes,
+            jnp.zeros((n,), jnp.bool_), incarnation)
 
         def lower_writer(loc, reader):
-            return mvindex.resolve(index, zeros, incarnation, loc,
-                                   reader).found
+            return pend_resolver(loc, reader).found
 
         foot = jnp.concatenate([res.read_locs, res.write_locs], axis=1)
         readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],

@@ -24,15 +24,15 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import executor, mvindex
-from repro.core.types import (NO_LOC, STORAGE, BlockResult, EngineConfig,
-                              EngineState, ExecResult)
+from repro.core import executor, mv
+from repro.core.types import (NO_LOC, STORAGE, BlockResult, BlockStats,
+                              EngineConfig, EngineState, ExecResult)
 from repro.core.vm import TxnProgram
 
 
 def _init_state(cfg: EngineConfig) -> EngineState:
     n, w, r = cfg.n_txns, cfg.max_writes, cfg.max_reads
-    empty_index = mvindex.build_index(jnp.full((n, w), NO_LOC, jnp.int32), n)
+    backend = mv.make_backend(cfg)
     return EngineState(
         write_locs=jnp.full((n, w), NO_LOC, jnp.int32),
         write_vals=jnp.zeros((n, w), cfg.value_dtype),
@@ -46,8 +46,7 @@ def _init_state(cfg: EngineConfig) -> EngineState:
         blocked_by=jnp.full((n,), -1, jnp.int32),
         frontier=jnp.asarray(0, jnp.int32),
         wave=jnp.asarray(0, jnp.int32),
-        idx_keys=empty_index.keys, idx_txn=empty_index.txn,
-        idx_slot=empty_index.slot,
+        index=backend.build(jnp.full((n, w), NO_LOC, jnp.int32)),
         stat_execs=jnp.asarray(0, jnp.int32),
         stat_dep_aborts=jnp.asarray(0, jnp.int32),
         stat_val_aborts=jnp.asarray(0, jnp.int32),
@@ -77,23 +76,14 @@ def _select_wave(state: EngineState, cfg: EngineConfig) -> tuple[jax.Array, jax.
 
 
 def _make_resolver(state: EngineState, cfg: EngineConfig):
-    """Read-resolution closure for the current MV state (backend-selected)."""
-    if cfg.backend == "dense":
-        table = mvindex.dense_last_writer(state.write_locs, cfg.n_locs,
-                                          use_pallas=cfg.use_pallas)
+    """Read-resolution closure for the current MV state (backend-selected).
 
-        def resolver(loc, reader):
-            return mvindex.dense_resolve(table, state.write_locs,
-                                         state.estimate, state.incarnation,
-                                         loc, reader)
-    else:
-        index = mvindex.MVIndex(state.idx_keys, state.idx_txn, state.idx_slot,
-                                cfg.n_txns)
-
-        def resolver(loc, reader):
-            return mvindex.resolve(index, state.estimate, state.incarnation,
-                                   loc, reader)
-    return resolver
+    Every backend (sorted / dense / sharded) is consumed through the
+    :class:`~repro.core.mv.base.MVBackend` protocol: the engine never touches
+    index layout, only ``state.index`` as an opaque pytree.
+    """
+    return mv.make_backend(cfg).make_resolver(
+        state.index, state.write_locs, state.estimate, state.incarnation)
 
 
 def _execute_wave(state: EngineState, active_ids: jax.Array,
@@ -226,10 +216,8 @@ def _wave_step(state: EngineState, program: TxnProgram, params: Any,
     active_ids, active_mask = _select_wave(state, cfg)
     res = _execute_wave(state, active_ids, program, params, storage, cfg)
     state = _apply_results(state, active_ids, active_mask, res, cfg)
-    if cfg.backend != "dense":   # dense resolvers rebuild from write_locs lazily
-        index = mvindex.build_index(state.write_locs, cfg.n_txns)
-        state = state._replace(idx_keys=index.keys, idx_txn=index.txn,
-                               idx_slot=index.slot)
+    state = state._replace(
+        index=mv.make_backend(cfg).build(state.write_locs))
     state = _validate_all(state, cfg)
     return state._replace(wave=state.wave + 1)
 
@@ -274,16 +262,20 @@ def make_executor(program: TxnProgram, cfg: EngineConfig) -> Callable:
 
 
 def run_chain(program: TxnProgram, blocks_params: Any, storage: jax.Array,
-              cfg: EngineConfig) -> tuple[jax.Array, BlockResult]:
+              cfg: EngineConfig) -> tuple[jax.Array, BlockStats]:
     """Execute a CHAIN of blocks: each block's committed snapshot becomes the
     next block's storage (the blockchain validator loop; paper §1 "state is
     updated per block").  ``blocks_params`` leaves have a leading block axis.
     Jit-compatible: one compiled program executes the whole chain via scan.
+
+    Returns ``(final_state, stats)`` where ``stats`` is a
+    :class:`~repro.core.types.BlockStats` with one leading block axis per
+    field — per-block counters come out typed, with no snapshot placeholder
+    inflating the scan carry.
     """
     def step(st, params):
         res = run_block(program, params, st, cfg)
-        return res.snapshot, res._replace(snapshot=jnp.zeros((0,),
-                                                             cfg.value_dtype))
+        return res.snapshot, res.stats()
 
-    final_state, results = jax.lax.scan(step, storage, blocks_params)
-    return final_state, results
+    final_state, stats = jax.lax.scan(step, storage, blocks_params)
+    return final_state, stats

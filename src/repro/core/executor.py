@@ -32,7 +32,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import mvindex
+from repro.core import mv
 from repro.core.types import NO_LOC, EngineConfig
 from repro.core.vm import TxnProgram, make_exec_one
 
@@ -53,7 +53,7 @@ def execute_txns(program: TxnProgram, params: Any, storage: jax.Array,
     gather would be an identity copy of every array, code tensors included).
     """
     def value_reader(res, loc):
-        return mvindex.resolve_value(write_vals, storage, res, loc)
+        return mv.resolve_value(write_vals, storage, res, loc)
 
     exec_one = make_exec_one(program, cfg, resolver, value_reader)
     if txn_ids is None:
@@ -68,16 +68,15 @@ def committed_resolver(write_locs: jax.Array, live: jax.Array,
     """Resolver over the write sets of ``live`` transactions only.
 
     This is MVMemory restricted to final values — no ESTIMATEs, so reads
-    never block.  Baseline rounds and snapshots both read through it.
+    never block.  Baseline rounds and snapshots both read through it, via
+    whatever MV backend ``cfg.backend`` selects (the baselines honor the
+    backend exactly like the wave engine does).
     """
-    index = mvindex.build_index(
-        jnp.where(live[:, None], write_locs, NO_LOC), cfg.n_txns)
+    backend = mv.make_backend(cfg)
+    masked = jnp.where(live[:, None], write_locs, NO_LOC)
     no_estimates = jnp.zeros((cfg.n_txns,), jnp.bool_)
-
-    def resolver(loc, reader):
-        return mvindex.resolve(index, no_estimates, incarnation, loc, reader)
-
-    return resolver
+    return backend.make_resolver(backend.build(masked), masked, no_estimates,
+                                 incarnation)
 
 
 def read_snapshot(resolver, write_vals: jax.Array, storage: jax.Array,
@@ -87,7 +86,7 @@ def read_snapshot(resolver, write_vals: jax.Array, storage: jax.Array,
 
     def read_final(loc):
         res = resolver(loc, reader)
-        return mvindex.resolve_value(write_vals, storage, res, loc)
+        return mv.resolve_value(write_vals, storage, res, loc)
 
     return jax.vmap(read_final)(jnp.arange(cfg.n_locs, dtype=jnp.int32))
 

@@ -1,0 +1,52 @@
+"""Multi-version memory backends (the paper's MVMemory, Algorithm 2).
+
+Read resolution is a first-class subsystem: every engine layer (wave engine,
+baselines, snapshots, the bytecode interpreter's READ op) consumes the
+:class:`~repro.core.mv.base.MVBackend` protocol, never a concrete index
+layout.  Three registered backends:
+
+* ``sorted``  — one flat sorted key array, ``key = loc*(n+1)+writer``.  The
+  single-region production path; universe capped by int32 keys.
+* ``dense``   — materialized (n+1, L) last-writer table, O(1) reads; tiny
+  universes only (the ``mv_resolve`` Pallas kernel's layout).
+* ``sharded`` — per-region sorted indexes with shard-local keys; survives
+  arbitrarily large universes (10M+ locations) and is the seam for
+  multi-device ``shard_map`` execution.
+
+``make_backend(cfg)`` maps an :class:`~repro.core.types.EngineConfig` to its
+backend instance.  See README.md in this package for the protocol contract,
+the shard-local key encoding and its overflow math, and how to add a backend.
+"""
+from __future__ import annotations
+
+from repro.core.mv.base import MVBackend, ReadResolution, Resolver, resolve_value
+from repro.core.mv.dense import DenseBackend, DenseIndex
+from repro.core.mv.sharded import ShardedBackend, ShardedIndex, shard_plan
+from repro.core.mv.sorted_index import SortedBackend, SortedIndex
+
+#: Backend names accepted by ``EngineConfig.backend``.
+BACKENDS = ("sorted", "dense", "sharded")
+
+
+def make_backend(cfg) -> MVBackend:
+    """Backend instance for an :class:`~repro.core.types.EngineConfig`.
+
+    Static per-config (pure Python, trace-time only): call freely inside
+    jitted code.
+    """
+    if cfg.backend == "sorted":
+        return SortedBackend(n_txns=cfg.n_txns)
+    if cfg.backend == "dense":
+        return DenseBackend(n_txns=cfg.n_txns, n_locs=cfg.n_locs,
+                            use_pallas=cfg.use_pallas)
+    if cfg.backend == "sharded":
+        return ShardedBackend.from_universe(cfg.n_txns, cfg.n_locs,
+                                            cfg.n_shards)
+    raise ValueError(f"unknown MV backend {cfg.backend!r}; "
+                     f"expected one of {BACKENDS}")
+
+
+__all__ = ["MVBackend", "ReadResolution", "Resolver", "resolve_value",
+           "SortedBackend", "SortedIndex", "DenseBackend", "DenseIndex",
+           "ShardedBackend", "ShardedIndex", "shard_plan", "BACKENDS",
+           "make_backend"]

@@ -1,0 +1,88 @@
+"""MVBackend protocol: multi-version read resolution as a first-class subsystem.
+
+The paper's MVMemory (Algorithm 2) answers one question: *a read of ``loc`` by
+``tx_j`` resolves to the write of the highest writer ``tx_i`` with ``i < j``
+that has a live entry at ``loc``* — plus the writer's incarnation stamp and
+ESTIMATE flag.  Everything else in the engine (dependency registration,
+validation, the commit frontier, snapshots) consumes only the answer, never
+the data structure that produced it.
+
+This module pins down that seam.  A backend is an object with two methods:
+
+* ``build(write_locs) -> index``     — turn the block's ``(n, W)`` live write
+  slots into whatever pytree of arrays the backend searches.  Called once at
+  engine init and once per wave (after write sets change); the pytree rides
+  in the ``lax.while_loop`` carry, so its structure and shapes must be fixed
+  for a given :class:`~repro.core.types.EngineConfig`.
+* ``make_resolver(index, write_locs, estimate, incarnation) -> resolver`` —
+  close over the current MV state and return ``resolver(loc, reader) ->
+  ReadResolution``, a scalar function the engine vmaps over reads, read-set
+  validation rows, and the final snapshot.
+
+Backends registered in :mod:`repro.core.mv` (``sorted`` / ``dense`` /
+``sharded``) are interchangeable: the backend-equivalence property suite
+(``tests/test_mv_backends.py``) checks byte-identical snapshots AND identical
+abort/wave statistics, i.e. resolution-for-resolution agreement.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import STORAGE
+
+
+class ReadResolution(NamedTuple):
+    """Answer to one MV read (all fields are scalars; vmappable)."""
+
+    found: jax.Array       # () bool — a lower writer exists (paper: status OK)
+    writer: jax.Array      # () i32 — writer txn idx, or STORAGE
+    slot: jax.Array        # () i32 — writer's write slot (for value gather)
+    inc: jax.Array         # () i32 — writer's incarnation stamp (version)
+    is_estimate: jax.Array  # () bool — entry is an ESTIMATE (paper: READ_ERROR)
+
+
+#: ``resolver(loc, reader) -> ReadResolution`` — what ``make_resolver`` returns.
+Resolver = Callable[[jax.Array, jax.Array], ReadResolution]
+
+
+@runtime_checkable
+class MVBackend(Protocol):
+    """One multi-version index implementation (see module docstring)."""
+
+    name: str
+
+    def build(self, write_locs: jax.Array) -> Any:
+        """(n, W) int32 live write locations -> index pytree (arrays only)."""
+        ...
+
+    def make_resolver(self, index: Any, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array) -> Resolver:
+        """Close over the current MV state; return the per-read resolver."""
+        ...
+
+
+def finalize_resolution(found: jax.Array, txn_entry: jax.Array,
+                        slot_entry: jax.Array, estimate: jax.Array,
+                        incarnation: jax.Array) -> ReadResolution:
+    """Shared tail of every index-lookup backend: stamp the found entry with
+    the writer's ESTIMATE flag and incarnation, or the STORAGE sentinel."""
+    writer = jnp.where(found, txn_entry, STORAGE)
+    slot = jnp.where(found, slot_entry, 0)
+    safe_writer = jnp.where(found, writer, 0)
+    is_est = found & estimate[safe_writer]
+    inc = jnp.where(found, incarnation[safe_writer], -1)
+    return ReadResolution(found=found, writer=writer.astype(jnp.int32),
+                          slot=slot.astype(jnp.int32),
+                          inc=inc.astype(jnp.int32), is_estimate=is_est)
+
+
+def resolve_value(write_vals: jax.Array, storage: jax.Array,
+                  res: ReadResolution, loc: jax.Array) -> jax.Array:
+    """Value of a resolution: writer's slot value, else storage[loc]."""
+    safe_loc = jnp.clip(loc, 0, storage.shape[0] - 1)
+    from_mv = write_vals[jnp.where(res.found, res.writer, 0),
+                         jnp.where(res.found, res.slot, 0)]
+    return jnp.where(res.found, from_mv, storage[safe_loc])

@@ -1,0 +1,83 @@
+"""Dense MV backend: (n+1, L) exclusive running-argmax last-writer table.
+
+``last_writer[j, l] = max{i < j : tx_i writes l}`` materialized for every
+(reader, location) pair; reads are O(1) gathers.  Only viable when ``n*L`` is
+small — this is the layout the ``mv_resolve`` Pallas kernel produces (see
+``src/repro/kernels/mv_resolve``), so it doubles as the kernel's host-side
+reference backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mv.base import ReadResolution
+from repro.core.types import NO_LOC, STORAGE
+
+
+class DenseIndex(NamedTuple):
+    last_writer: jax.Array   # (n+1, L) i32 exclusive running argmax, -1 = none
+
+
+def dense_last_writer(write_locs: jax.Array, n_locs: int, *,
+                      use_pallas: bool = False) -> jax.Array:
+    """Build ``last_writer[j, l] = max{i < j : tx_i has a live write at l}`` (else -1).
+
+    The scatter builds the per-(txn, loc) write marks; the exclusive cumulative
+    max along the txn axis is the hot loop and is what the ``mv_resolve`` Pallas
+    kernel implements for TPU.
+    """
+    n, w = write_locs.shape
+    marks = jnp.full((n, n_locs), -1, dtype=jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
+    live = write_locs != NO_LOC
+    cols = jnp.where(live, write_locs, 0)
+    vals = jnp.where(live, rows, -1)
+    marks = marks.at[rows, cols].max(vals)
+    if use_pallas:
+        from repro.kernels.mv_resolve import ops as mv_ops
+        return mv_ops.exclusive_cummax(marks)
+    zero = jnp.full((1, n_locs), -1, dtype=jnp.int32)
+    inclusive = jax.lax.cummax(marks, axis=0)
+    return jnp.concatenate([zero, inclusive], axis=0)
+
+
+def dense_resolve(last_writer: jax.Array, write_locs: jax.Array,
+                  estimate: jax.Array, incarnation: jax.Array, loc: jax.Array,
+                  reader: jax.Array) -> ReadResolution:
+    """Resolve one read against the dense table (vmappable)."""
+    safe_loc = jnp.clip(loc, 0, last_writer.shape[1] - 1)
+    writer = last_writer[reader, safe_loc]
+    found = (writer >= 0) & (loc != NO_LOC)
+    safe_writer = jnp.where(found, writer, 0)
+    # Recover which slot of the writer holds this location.
+    slot_match = write_locs[safe_writer] == loc
+    slot = jnp.argmax(slot_match, axis=-1).astype(jnp.int32)
+    is_est = found & estimate[safe_writer]
+    inc = jnp.where(found, incarnation[safe_writer], -1)
+    return ReadResolution(found=found, writer=jnp.where(found, writer, STORAGE),
+                          slot=slot, inc=inc.astype(jnp.int32), is_estimate=is_est)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseBackend:
+    """MVBackend over the materialized last-writer table (see module docstring)."""
+
+    n_txns: int
+    n_locs: int
+    use_pallas: bool = False
+    name: str = dataclasses.field(default="dense", init=False)
+
+    def build(self, write_locs: jax.Array) -> DenseIndex:
+        return DenseIndex(dense_last_writer(write_locs, self.n_locs,
+                                            use_pallas=self.use_pallas))
+
+    def make_resolver(self, index: DenseIndex, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array):
+        def resolver(loc, reader):
+            return dense_resolve(index.last_writer, write_locs, estimate,
+                                 incarnation, loc, reader)
+        return resolver

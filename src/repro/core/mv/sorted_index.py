@@ -1,0 +1,81 @@
+"""Sorted MV backend: one flat binary-searchable key array.
+
+Every live write slot is encoded as the key ``loc*(n_txns+1)+writer`` and the
+key array is kept sorted.  A read is ``searchsorted(keys, loc*(n+1)+reader) -
+1`` followed by one bounds check: O((nW + queries)·log nW) per wave,
+independent of the location-universe size.  This is the production path for
+single-region universes; its int32 keys cap the universe at
+``(2^31 - 1 - n) // (n+1)`` locations — beyond that, use the ``sharded``
+backend (shard-local keys).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mv.base import ReadResolution, finalize_resolution
+from repro.core.types import NO_LOC
+
+_KEY_MAX = jnp.iinfo(jnp.int32).max
+
+
+class SortedIndex(NamedTuple):
+    """Sorted multi-version index over all live write slots (arrays only)."""
+
+    keys: jax.Array      # (n*W,) i32 ascending loc*(n+1)+writer; dead = +inf
+    txn: jax.Array       # (n*W,) i32 writer txn index per sorted entry
+    slot: jax.Array      # (n*W,) i32 writer's write slot per sorted entry
+
+
+def sort_write_slots(write_locs: jax.Array, n_txns: int) -> SortedIndex:
+    """Sort all live (loc, writer) write slots into a binary-searchable index."""
+    n, w = write_locs.shape
+    if write_locs.dtype != jnp.int32:
+        raise TypeError(f"write_locs must be int32, got {write_locs.dtype}")
+    writer = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
+    slot = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None, :], (n, w))
+    live = write_locs != NO_LOC
+    keys = write_locs * (n_txns + 1) + writer
+    assert keys.dtype == jnp.int32, keys.dtype  # EngineConfig rejects overflow
+    keys = jnp.where(live, keys, _KEY_MAX).reshape(-1)
+    # NOTE (§Perf engine iteration 4, refuted): replacing argsort+gathers
+    # with a 3-operand lax.sort co-sort measured ~30% SLOWER on the XLA CPU
+    # backend; argsort+gather kept.
+    order = jnp.argsort(keys)
+    return SortedIndex(keys=keys[order], txn=writer.reshape(-1)[order],
+                       slot=slot.reshape(-1)[order])
+
+
+def resolve_sorted(index: SortedIndex, n_txns: int, estimate: jax.Array,
+                   incarnation: jax.Array, loc: jax.Array,
+                   reader: jax.Array) -> ReadResolution:
+    """Resolve one read (vmappable). ``reader`` may be BLOCK.size() for snapshot."""
+    # Highest key strictly below loc*(n+1)+reader with the same loc.
+    query = loc * (n_txns + 1) + reader
+    pos = jnp.searchsorted(index.keys, query, side="left") - 1
+    safe = jnp.maximum(pos, 0)
+    key = index.keys[safe]
+    found = (pos >= 0) & (key // (n_txns + 1) == loc) & (loc != NO_LOC)
+    return finalize_resolution(found, index.txn[safe], index.slot[safe],
+                               estimate, incarnation)
+
+
+@dataclasses.dataclass(frozen=True)
+class SortedBackend:
+    """MVBackend over one flat sorted key array (see module docstring)."""
+
+    n_txns: int
+    name: str = dataclasses.field(default="sorted", init=False)
+
+    def build(self, write_locs: jax.Array) -> SortedIndex:
+        return sort_write_slots(write_locs, self.n_txns)
+
+    def make_resolver(self, index: SortedIndex, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array):
+        def resolver(loc, reader):
+            return resolve_sorted(index, self.n_txns, estimate, incarnation,
+                                  loc, reader)
+        return resolver

@@ -1,38 +1,35 @@
-"""Multi-version read resolution (the paper's MVMemory.read, Algorithm 2 L47-54).
+"""DEPRECATED shim — multi-version read resolution moved to :mod:`repro.core.mv`.
 
-A read of ``loc`` by ``tx_j`` must resolve to the write of the *highest* writer
-``tx_i`` with ``i < j`` that has a live entry at ``loc`` — plus the writer's
-incarnation and ESTIMATE flag.
-
-Two TPU-friendly backends replace the paper's concurrent hashmap:
-
-* ``sorted``  — encode every live write slot as the key ``loc*(n+1)+writer`` and
-  keep the key array sorted.  A read is then ``searchsorted(keys, loc*(n+1)+j)-1``
-  followed by one bounds check.  O((nW + queries)·log nW) per wave, independent of
-  the location-universe size.  This is the production path.
-
-* ``dense``   — materialize a (n+1, L) exclusive running-argmax table
-  ``last_writer[j, l] = max{i < j : tx_i writes l}``.  Reads are O(1) gathers.
-  Only viable when n*L is small; this is the layout the ``mv_resolve`` Pallas
-  kernel produces (see src/repro/kernels/mv_resolve).
+This module kept the two original hard-wired code paths (``sorted`` and
+``dense``) as free functions.  They now live behind the
+:class:`~repro.core.mv.base.MVBackend` protocol (``repro.core.mv``), which
+adds the ``sharded`` backend for beyond-int32 location universes.  The
+original API is preserved here verbatim for downstream callers; new code
+should use ``mv.make_backend(cfg)`` / the backend classes directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.types import NO_LOC, STORAGE
+from repro.core.mv.base import ReadResolution, resolve_value  # noqa: F401
+from repro.core.mv.dense import dense_last_writer, dense_resolve  # noqa: F401
+from repro.core.mv.sorted_index import (_KEY_MAX, resolve_sorted,  # noqa: F401
+                                        sort_write_slots)
 
-_KEY_MAX = jnp.iinfo(jnp.int32).max
+warnings.warn(
+    "repro.core.mvindex is deprecated; use repro.core.mv (MVBackend protocol)",
+    DeprecationWarning, stacklevel=2)
 
 
 class MVIndex(NamedTuple):
-    """Sorted multi-version index over all live write slots."""
+    """Sorted multi-version index over all live write slots (legacy layout)."""
 
     keys: jax.Array      # (n*W,) i32 ascending; dead slots pushed to +inf
-                         # (key = loc*(n+1)+writer; EngineConfig asserts no overflow)
+                         # (key = loc*(n+1)+writer; EngineConfig rejects
+                         # overflow for non-sharded backends)
     txn: jax.Array       # (n*W,) i32 writer txn index per sorted entry
     slot: jax.Array      # (n*W,) i32 writer's write slot per sorted entry
     n_txns: int          # static
@@ -40,102 +37,13 @@ class MVIndex(NamedTuple):
 
 def build_index(write_locs: jax.Array, n_txns: int) -> MVIndex:
     """Sort all live (loc, writer) write slots into a binary-searchable index."""
-    n, w = write_locs.shape
-    if write_locs.dtype != jnp.int32:
-        raise TypeError(f"write_locs must be int32, got {write_locs.dtype}")
-    writer = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
-    slot = jnp.broadcast_to(jnp.arange(w, dtype=jnp.int32)[None, :], (n, w))
-    live = write_locs != NO_LOC
-    keys = write_locs * (n_txns + 1) + writer
-    assert keys.dtype == jnp.int32, keys.dtype  # EngineState.idx_keys contract
-    keys = jnp.where(live, keys, _KEY_MAX).reshape(-1)
-    # NOTE (§Perf engine iteration 4, refuted): replacing argsort+gathers
-    # with a 3-operand lax.sort co-sort measured ~30% SLOWER on the XLA CPU
-    # backend; argsort+gather kept.
-    order = jnp.argsort(keys)
-    return MVIndex(
-        keys=keys[order],
-        txn=writer.reshape(-1)[order],
-        slot=slot.reshape(-1)[order],
-        n_txns=n_txns,
-    )
-
-
-class ReadResolution(NamedTuple):
-    found: jax.Array       # () bool — a lower writer exists (paper: status OK)
-    writer: jax.Array      # () i32 — writer txn idx, or STORAGE
-    slot: jax.Array        # () i32 — writer's write slot (for value gather)
-    inc: jax.Array         # () i32 — writer's incarnation stamp (version)
-    is_estimate: jax.Array  # () bool — entry is an ESTIMATE (paper: READ_ERROR)
+    idx = sort_write_slots(write_locs, n_txns)
+    return MVIndex(keys=idx.keys, txn=idx.txn, slot=idx.slot, n_txns=n_txns)
 
 
 def resolve(index: MVIndex, estimate: jax.Array, incarnation: jax.Array,
             loc: jax.Array, reader: jax.Array) -> ReadResolution:
     """Resolve one read (vmappable). ``reader`` may be BLOCK.size() for snapshot."""
-    # Highest key strictly below loc*(n+1)+reader with the same loc.
-    query = loc * (index.n_txns + 1) + reader
-    pos = jnp.searchsorted(index.keys, query, side="left") - 1
-    safe = jnp.maximum(pos, 0)
-    key = index.keys[safe]
-    found = (pos >= 0) & (key // (index.n_txns + 1) == loc) & (loc != NO_LOC)
-    writer = jnp.where(found, index.txn[safe], STORAGE)
-    slot = jnp.where(found, index.slot[safe], 0)
-    safe_writer = jnp.where(found, writer, 0)
-    is_est = found & estimate[safe_writer]
-    inc = jnp.where(found, incarnation[safe_writer], -1)
-    return ReadResolution(found=found, writer=writer.astype(jnp.int32),
-                          slot=slot.astype(jnp.int32), inc=inc.astype(jnp.int32),
-                          is_estimate=is_est)
-
-
-def resolve_value(write_vals: jax.Array, storage: jax.Array, res: ReadResolution,
-                  loc: jax.Array) -> jax.Array:
-    """Value of a resolution: writer's slot value, else storage[loc]."""
-    safe_loc = jnp.clip(loc, 0, storage.shape[0] - 1)
-    from_mv = write_vals[jnp.where(res.found, res.writer, 0),
-                         jnp.where(res.found, res.slot, 0)]
-    return jnp.where(res.found, from_mv, storage[safe_loc])
-
-
-# ---------------------------------------------------------------------------
-# Dense backend: (n+1, L) exclusive running argmax of writers per location.
-# ---------------------------------------------------------------------------
-
-def dense_last_writer(write_locs: jax.Array, n_locs: int, *,
-                      use_pallas: bool = False) -> jax.Array:
-    """Build ``last_writer[j, l] = max{i < j : tx_i has a live write at l}`` (else -1).
-
-    The scatter builds the per-(txn, loc) write marks; the exclusive cumulative
-    max along the txn axis is the hot loop and is what the ``mv_resolve`` Pallas
-    kernel implements for TPU.
-    """
-    n, w = write_locs.shape
-    marks = jnp.full((n, n_locs), -1, dtype=jnp.int32)
-    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, w))
-    live = write_locs != NO_LOC
-    cols = jnp.where(live, write_locs, 0)
-    vals = jnp.where(live, rows, -1)
-    marks = marks.at[rows, cols].max(vals)
-    if use_pallas:
-        from repro.kernels.mv_resolve import ops as mv_ops
-        return mv_ops.exclusive_cummax(marks)
-    zero = jnp.full((1, n_locs), -1, dtype=jnp.int32)
-    inclusive = jax.lax.cummax(marks, axis=0)
-    return jnp.concatenate([zero, inclusive], axis=0)
-
-
-def dense_resolve(last_writer: jax.Array, write_locs: jax.Array,
-                  estimate: jax.Array, incarnation: jax.Array, loc: jax.Array,
-                  reader: jax.Array) -> ReadResolution:
-    """Resolve one read against the dense table (vmappable)."""
-    safe_loc = jnp.clip(loc, 0, last_writer.shape[1] - 1)
-    writer = last_writer[reader, safe_loc]
-    found = (writer >= 0) & (loc != NO_LOC)
-    safe_writer = jnp.where(found, writer, 0)
-    # Recover which slot of the writer holds this location.
-    slot_match = write_locs[safe_writer] == loc
-    slot = jnp.argmax(slot_match, axis=-1).astype(jnp.int32)
-    is_est = found & estimate[safe_writer]
-    inc = jnp.where(found, incarnation[safe_writer], -1)
-    return ReadResolution(found=found, writer=jnp.where(found, writer, STORAGE),
-                          slot=slot, inc=inc.astype(jnp.int32), is_estimate=is_est)
+    from repro.core.mv.sorted_index import SortedIndex
+    return resolve_sorted(SortedIndex(index.keys, index.txn, index.slot),
+                          index.n_txns, estimate, incarnation, loc, reader)

@@ -15,7 +15,7 @@ single ``lax.while_loop`` carry and can be donated.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,17 +39,30 @@ class EngineConfig:
                                  # instead of O(n) validation per wave)
     max_waves: int = 0           # 0 -> auto (2*n + 8)
     value_dtype: jnp.dtype = jnp.int32
-    backend: str = "sorted"      # 'sorted' | 'dense' (dense uses the Pallas kernel path)
+    backend: str = "sorted"      # 'sorted' | 'dense' | 'sharded' (repro.core.mv)
     use_pallas: bool = False     # dense backend: pallas mv_resolve (interpret on CPU)
+    n_shards: int = 0            # sharded backend: region count (0 = fewest
+                                 # shards keeping shard-local keys in int32)
     track_write_stability: bool = True  # paper's wrote_new_location statistic
 
     def __post_init__(self):
-        # sorted-index keys are loc*(n+1)+writer in int32 (x64 is disabled).
-        if self.n_locs * (self.n_txns + 1) + self.n_txns >= 2**31:
+        if self.backend not in ("sorted", "dense", "sharded"):
+            raise ValueError(f"unknown MV backend {self.backend!r}; expected "
+                             f"'sorted', 'dense', or 'sharded'")
+        # Index keys are loc*(n+1)+writer in int32 (x64 is disabled).  The
+        # flat backends key the whole universe; 'sharded' keys per region, so
+        # only the region size is bounded (shard_plan validates it and raises
+        # its own ValueError for an explicit n_shards that is too small).
+        if self.backend == "sharded":
+            from repro.core.mv.sharded import shard_plan
+            shard_plan(self.n_locs, self.n_txns, self.n_shards)
+        elif self.n_locs * (self.n_txns + 1) + self.n_txns >= 2**31:
             raise ValueError(
-                f"n_locs*(n_txns+1) overflows int32 index keys "
-                f"({self.n_locs}*{self.n_txns + 1}); shrink the block or "
-                f"location universe, or shard the block.")
+                f"MV index keys loc*(n_txns+1)+writer overflow int32 for "
+                f"n_locs={self.n_locs}, n_txns={self.n_txns} under "
+                f"backend={self.backend!r}; use backend='sharded' (shard-"
+                f"local keys survive any universe size), or shrink the "
+                f"block or location universe.")
 
     def waves_cap(self) -> int:
         return self.max_waves if self.max_waves > 0 else 2 * self.n_txns + 8
@@ -73,12 +86,11 @@ class EngineState(NamedTuple):
     blocked_by: jax.Array        # (n,) i32: txn idx whose ESTIMATE blocked us, or -1
     frontier: jax.Array          # () i32: txns < frontier are committed
     wave: jax.Array              # () i32
-    # -- sorted multi-version index (rebuilt each wave) ----------------------
-    idx_keys: jax.Array          # (n*W,) i32 sorted keys loc*(n+1)+writer, dead=MAX
-                                 # (int32 by construction: x64 is disabled and
-                                 # EngineConfig.__post_init__ rejects overflow)
-    idx_txn: jax.Array           # (n*W,) i32 writer txn of the sorted entry
-    idx_slot: jax.Array          # (n*W,) i32 write slot of the sorted entry
+    # -- multi-version index (rebuilt each wave) -----------------------------
+    index: Any                   # backend-owned pytree of arrays (fixed shape
+                                 # per EngineConfig): SortedIndex /
+                                 # DenseIndex / ShardedIndex — see
+                                 # repro.core.mv (MVBackend protocol)
     # -- statistics ----------------------------------------------------------
     stat_execs: jax.Array        # () i32 total incarnations executed
     stat_dep_aborts: jax.Array   # () i32 executions aborted on an ESTIMATE read
@@ -98,6 +110,22 @@ class ExecResult(NamedTuple):
     blocker: jax.Array           # () i32: blocking txn idx
 
 
+class BlockStats(NamedTuple):
+    """Per-block execution counters WITHOUT the snapshot.
+
+    This is the carry-friendly result type: ``run_chain`` scans over blocks
+    and stacks one :class:`BlockStats` per block, instead of smuggling a
+    placeholder array through :class:`BlockResult`'s snapshot field.
+    """
+
+    committed: jax.Array         # () bool: frontier == n (False => wave cap hit)
+    waves: jax.Array             # () i32
+    execs: jax.Array             # () i32 total incarnations
+    dep_aborts: jax.Array       # () i32
+    val_aborts: jax.Array       # () i32
+    wrote_new: jax.Array        # () i32
+
+
 class BlockResult(NamedTuple):
     """Result of executing one block."""
 
@@ -108,3 +136,9 @@ class BlockResult(NamedTuple):
     dep_aborts: jax.Array       # () i32
     val_aborts: jax.Array       # () i32
     wrote_new: jax.Array        # () i32
+
+    def stats(self) -> BlockStats:
+        """The snapshot-free view (typed; see :class:`BlockStats`)."""
+        return BlockStats(committed=self.committed, waves=self.waves,
+                          execs=self.execs, dep_aborts=self.dep_aborts,
+                          val_aborts=self.val_aborts, wrote_new=self.wrote_new)

@@ -37,7 +37,6 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import mvindex
 from repro.core.types import NO_LOC, STORAGE, EngineConfig, ExecResult
 
 TxnProgram = Callable[..., None]  # (params, ctx) -> None

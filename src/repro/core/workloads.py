@@ -20,6 +20,7 @@ Location universes are laid out as flat int32 ids:
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,34 @@ from repro.core.types import EngineConfig
 
 CHAIN_CFG_READS_DIEM = 15   # 21 total reads = 15 cfg + 2 balances + 2 seqnos + 2 frozen-flags
 CHAIN_CFG_READS_APTOS = 4   # 8 total reads  = 4 cfg + 2 balances + 2 seqnos
+
+
+def zipf_choice(rng: np.random.Generator, n: int, size: int,
+                s: float = 0.0) -> np.ndarray:
+    """Sample ``size`` ids from [0, n) with Zipf(s) rank weights.
+
+    ``P(k) ∝ 1/(k+1)^s`` — id 0 is the hottest.  ``s=0`` falls back to the
+    exact uniform draw the generators used before the knob existed (so
+    default blocks are bit-identical across versions).  With a skew knob,
+    contention is governed by hotness rather than universe size: a 10M-account
+    universe at ``s≈1`` still funnels most traffic through a few thousand hot
+    accounts — the paper's contended-vs-uncontended sweep at realistic
+    account counts.
+    """
+    if s <= 0.0:
+        return rng.integers(0, n, size)
+    return np.searchsorted(_zipf_cdf(n, s), rng.random(size),
+                           side="right").astype(np.int64)
+
+
+@functools.lru_cache(maxsize=8)
+def _zipf_cdf(n: int, s: float) -> np.ndarray:
+    """Normalized Zipf(s) CDF over n ranks — O(n) and ~8n bytes, so memoized
+    (multi-million-account generators draw src and dst from the same CDF)."""
+    cdf = np.cumsum(np.arange(1, n + 1, dtype=np.float64) ** -s)
+    cdf /= cdf[-1]
+    cdf.setflags(write=False)
+    return cdf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,12 +102,21 @@ def p2p_program(spec: P2PSpec):
 
 
 def make_p2p_block(spec: P2PSpec, n_txns: int, seed: int = 0,
-                   init_balance: int = 10**6):
-    """Random p2p block + storage, mirroring the paper's generator."""
+                   init_balance: int = 10**6, zipf_s: float = 0.0):
+    """Random p2p block + storage, mirroring the paper's generator.
+
+    ``zipf_s > 0`` draws both endpoints Zipf-skewed (see :func:`zipf_choice`);
+    0 keeps the original uniform draw bit-for-bit.
+    """
     rng = np.random.default_rng(seed)
-    src = rng.integers(0, spec.n_accounts, n_txns)
+    src = zipf_choice(rng, spec.n_accounts, n_txns, zipf_s)
     # dst != src, as in the paper ("two different accounts").
-    dst = (src + rng.integers(1, max(spec.n_accounts, 2), n_txns)) % spec.n_accounts
+    if zipf_s > 0.0:
+        dst = zipf_choice(rng, spec.n_accounts, n_txns, zipf_s)
+        dst = np.where(dst == src, (dst + 1) % spec.n_accounts, dst)
+    else:
+        dst = (src + rng.integers(1, max(spec.n_accounts, 2), n_txns)) \
+            % spec.n_accounts
     if spec.n_accounts == 1:
         dst = src
     amount = rng.integers(1, 100, n_txns)
@@ -127,10 +165,11 @@ def indirect_program(spec: IndirectSpec):
 
 
 def make_indirect_block(spec: IndirectSpec, n_txns: int, seed: int = 0,
-                        repoint_prob: float = 0.2):
+                        repoint_prob: float = 0.2, zipf_s: float = 0.0):
     rng = np.random.default_rng(seed)
     params = {
-        "slot": jnp.asarray(rng.integers(0, spec.n_slots, n_txns), jnp.int32),
+        "slot": jnp.asarray(zipf_choice(rng, spec.n_slots, n_txns, zipf_s),
+                            jnp.int32),
         "delta": jnp.asarray(rng.integers(1, 50, n_txns), jnp.int32),
         "new_target": jnp.asarray(
             rng.integers(spec.n_slots, 2 * spec.n_slots, n_txns), jnp.int32),
@@ -185,11 +224,14 @@ def admission_program(spec: AdmissionSpec):
     return txn
 
 
-def make_admission_block(spec: AdmissionSpec, n_txns: int, seed: int = 0):
+def make_admission_block(spec: AdmissionSpec, n_txns: int, seed: int = 0,
+                         zipf_s: float = 0.0):
     rng = np.random.default_rng(seed)
     params = {
-        "tenant": jnp.asarray(rng.integers(0, spec.n_tenants, n_txns), jnp.int32),
-        "group": jnp.asarray(rng.integers(0, spec.n_groups, n_txns), jnp.int32),
+        "tenant": jnp.asarray(zipf_choice(rng, spec.n_tenants, n_txns, zipf_s),
+                              jnp.int32),
+        "group": jnp.asarray(zipf_choice(rng, spec.n_groups, n_txns, zipf_s),
+                             jnp.int32),
         "pages": jnp.asarray(rng.integers(1, 8, n_txns), jnp.int32),
     }
     storage = jnp.zeros(spec.n_locs, jnp.int32)
@@ -224,16 +266,48 @@ class MixedSpec:
         return self.p2p.n_locs + self.indirect.n_locs + self.admission.n_locs
 
 
+def scale_mixed_spec(spec: MixedSpec, n_locs: int) -> MixedSpec:
+    """Grow ``spec`` until its universe fills ``n_locs`` locations.
+
+    The extra space is split ~3:1 between p2p accounts and indirect pointer
+    slots (both cost 2 locations apiece); the admission region keeps its
+    size.  Up to one tail location may stay unused when parity doesn't work
+    out — the engine config still spans the full ``n_locs``.
+    """
+    if n_locs < spec.n_locs:
+        raise ValueError(f"n_locs={n_locs} is smaller than the spec's "
+                         f"universe ({spec.n_locs} locations)")
+    extra = n_locs - spec.n_locs
+    add_slots = extra // 8
+    add_accounts = (extra - 2 * add_slots) // 2
+    return dataclasses.replace(
+        spec,
+        p2p=dataclasses.replace(
+            spec.p2p, n_accounts=spec.p2p.n_accounts + add_accounts),
+        indirect=dataclasses.replace(
+            spec.indirect, n_slots=spec.indirect.n_slots + add_slots))
+
+
 def make_mixed_block(spec: MixedSpec, n_txns: int, seed: int = 0,
                      init_balance: int = 10**6, repoint_prob: float = 0.2,
-                     window: int = 32, **cfg_kw):
+                     window: int = 32, n_locs: int | None = None,
+                     zipf_s: float = 0.0, **cfg_kw):
     """Heterogeneous block: the three contract families interleaved at
     ``spec.ratios``.  Returns ``(vm, params, storage, cfg)`` where ``params``
     carries per-txn ``(code, args)`` — one jitted ``make_executor(vm, cfg)``
     runs ANY mix with zero recompiles.
+
+    ``n_locs`` (up to 10M+) grows the universe to a realistic account count
+    (:func:`scale_mixed_spec`); at that scale use ``backend='sharded'`` in
+    ``cfg_kw`` — flat int32 MV keys overflow.  ``zipf_s`` skews the location
+    draw (:func:`zipf_choice`), so contention is governed by hotness rather
+    than universe size.
     """
     from repro.bytecode import compile as BC
 
+    if n_locs is not None:
+        spec = scale_mixed_spec(spec, n_locs)
+    total_locs = max(n_locs or 0, spec.n_locs)
     rng = np.random.default_rng(seed)
     p2p_base = 0
     ind_base = spec.p2p.n_locs
@@ -250,11 +324,12 @@ def make_mixed_block(spec: MixedSpec, n_txns: int, seed: int = 0,
     # Reuse the single-family generators (one derived seed each) so the mixed
     # distributions can never drift from the homogeneous ones.
     p2p_params, p2p_storage = make_p2p_block(
-        spec.p2p, n_txns, seed=seed, init_balance=init_balance)
+        spec.p2p, n_txns, seed=seed, init_balance=init_balance, zipf_s=zipf_s)
     ind_params, ind_storage = make_indirect_block(
-        spec.indirect, n_txns, seed=seed + 1, repoint_prob=repoint_prob)
+        spec.indirect, n_txns, seed=seed + 1, repoint_prob=repoint_prob,
+        zipf_s=zipf_s)
     adm_params, adm_storage = make_admission_block(
-        spec.admission, n_txns, seed=seed + 2)
+        spec.admission, n_txns, seed=seed + 2, zipf_s=zipf_s)
     # Pointer VALUES in the indirect family are absolute locations in the
     # mixed universe: offset both the stored pointers and new_target params.
     ind_params = dict(ind_params,
@@ -279,6 +354,9 @@ def make_mixed_block(spec: MixedSpec, n_txns: int, seed: int = 0,
 
     storage = np.concatenate([np.asarray(p2p_storage), ind_storage,
                               np.asarray(adm_storage)]).astype(np.int32)
-    vm, cfg = BC.vm_and_config(progs, n_txns, spec.n_locs, window=window,
+    if total_locs > storage.shape[0]:      # ≤1 parity-padding tail location
+        storage = np.concatenate(
+            [storage, np.zeros(total_locs - storage.shape[0], np.int32)])
+    vm, cfg = BC.vm_and_config(progs, n_txns, total_locs, window=window,
                                **cfg_kw)
     return vm, params, jnp.asarray(storage), cfg

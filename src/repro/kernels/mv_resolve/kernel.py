@@ -3,7 +3,7 @@
 Computes the inclusive running maximum along the transaction axis of the
 write-mark matrix ``marks[(i, l)] = i if tx_i writes location l else -1`` —
 the table from which every MVMemory read ``(loc, reader)`` resolves with one
-gather (see ``repro.core.mvindex.dense_last_writer``).
+gather (see ``repro.core.mv.dense.dense_last_writer``).
 
 TPU mapping
 -----------
