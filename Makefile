@@ -1,7 +1,8 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
-.PHONY: test test-fast bench-smoke bench bench-baselines bench-shards
+.PHONY: test test-fast bench-smoke bench bench-baselines bench-shards \
+	bench-hotpath
 
 test:
 	$(PY) -m pytest -x -q
@@ -24,6 +25,12 @@ bench-baselines:
 # -> BENCH_shards.json.
 bench-shards:
 	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload shards --fast
+
+# Wave hot-loop phase timings: incremental backend.update vs full rebuild
+# per wave (+ end-to-end tps both ways) on the shard grid
+# -> BENCH_hotpath.json (uploaded as a CI artifact).
+bench-hotpath:
+	PYTHONPATH=src $(PY) -m benchmarks.hotpath_bench --fast
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast

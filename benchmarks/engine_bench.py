@@ -51,25 +51,30 @@ BASELINES_FAST_N, BASELINES_FULL_N = 192, 512
 
 
 def _run_engine(spec, n_txns, window, seed=0, reps=3, backend="sorted",
-                validation_window=0):
+                validation_window=0, **cfg_kw):
     cfg = W.p2p_engine_config(spec, n_txns, window=window, backend=backend,
-                              validation_window=validation_window)
+                              validation_window=validation_window, **cfg_kw)
     run = make_executor(W.p2p_program(spec), cfg)
     params, storage = W.make_p2p_block(spec, n_txns, seed=seed)
     res = run(params, storage)                      # compile + warm
     res.snapshot.block_until_ready()
     assert bool(res.committed)
-    times = []
+    times, rep_waves = [], []
     for r in range(reps):
         params, storage = W.make_p2p_block(spec, n_txns, seed=seed + r)
         t0 = time.perf_counter()
         res = run(params, storage)
         res.snapshot.block_until_ready()
         times.append(time.perf_counter() - t0)
+        # Every TIMED block must commit too (the warm-up assert alone would
+        # let tps be measured on wave-capped, uncommitted executions).
+        assert bool(res.committed), \
+            f"timed rep {r} (seed {seed + r}) did not commit"
+        rep_waves.append(int(res.waves))
     t = float(np.median(times))
-    return dict(tps=n_txns / t, seconds=t, waves=int(res.waves),
-                execs=int(res.execs), dep_aborts=int(res.dep_aborts),
-                val_aborts=int(res.val_aborts))
+    return dict(tps=n_txns / t, seconds=t, waves=rep_waves[-1],
+                waves_per_rep=rep_waves, execs=int(res.execs),
+                dep_aborts=int(res.dep_aborts), val_aborts=int(res.val_aborts))
 
 
 def _run_sequential(spec, n_txns, seed=0):

@@ -7,10 +7,22 @@ jittable JAX program:
     wave := select lowest-index pending txns (window = #virtual threads)
           -> vmap-execute them against the multi-version memory snapshot
           -> apply write sets / register dependencies (ESTIMATE hits)
-          -> rebuild the sorted multi-version index
-          -> validate every executed txn's read set against the new index
+          -> merge the wave's write-set delta into the multi-version index
+             (``backend.update``; per-region dirty tracking — or a full
+             ``backend.build`` rebuild under ``mv_update='rebuild'``)
+          -> validate executed txns' read sets against the new index —
+             skipping rows whose every read region is version-clean since
+             they last validated (``dirty_validation``)
           -> abort failures (write sets become ESTIMATEs)
           -> advance the commit frontier (longest executed&valid prefix)
+
+The incremental paths mirror the paper's collaborative scheduler: MVMemory is
+updated in place per write-set (Algorithm 2 ``record``) and validation work
+concentrates on what might have changed (the ``validation_idx`` intuition),
+so per-wave cost tracks the wave, not the block.  Both are exact: the
+incremental index is byte-identical to a fresh build, and a skipped row is
+one whose reads provably resolve to the same versions they validated against
+(``tests/test_mv_incremental.py`` property-tests both equivalences).
 
 The loop is a ``lax.while_loop`` over :class:`EngineState`; determinism is
 structural (no atomics, no races) and equivalence to the sequential execution
@@ -19,7 +31,7 @@ is property-tested in ``tests/test_engine_equivalence.py``.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +40,15 @@ from repro.core import executor, mv
 from repro.core.types import (NO_LOC, STORAGE, BlockResult, BlockStats,
                               EngineConfig, EngineState, ExecResult)
 from repro.core.vm import TxnProgram
+
+
+def _skip_enabled(cfg: EngineConfig) -> bool:
+    """Dirty-region validation skip: needs region versions (incremental
+    update) and the full-validation regime (windowed validation already
+    bounds per-wave work its own way)."""
+    return (cfg.dirty_validation and cfg.mv_update == "incremental"
+            and (cfg.validation_window <= 0
+                 or cfg.validation_window >= cfg.n_txns))
 
 
 def _init_state(cfg: EngineConfig) -> EngineState:
@@ -40,6 +61,7 @@ def _init_state(cfg: EngineConfig) -> EngineState:
         read_locs=jnp.full((n, r), NO_LOC, jnp.int32),
         read_writer=jnp.full((n, r), STORAGE, jnp.int32),
         read_inc=jnp.full((n, r), -1, jnp.int32),
+        read_region_ver=jnp.zeros((n, r), jnp.int32),
         incarnation=jnp.zeros((n,), jnp.int32),
         executed=jnp.zeros((n,), jnp.bool_),
         needs_exec=jnp.ones((n,), jnp.bool_),
@@ -149,9 +171,16 @@ def _apply_results(state: EngineState, active_ids: jax.Array,
 
 def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
                     read_writer, read_inc, readers) -> jax.Array:
-    """validate_read_set (paper L62-72), vectorized over rows."""
+    """validate_read_set (paper L62-72), vectorized over rows.
+
+    The (rows, R) read matrix is flattened to ONE vmap level so batched
+    resolver implementations (``resolver_impl='pallas'``: a custom_vmap whose
+    batch rule is the region-resolve kernel) see a single flat batch instead
+    of a nested one.
+    """
     resolver = _make_resolver(state, cfg)
-    res = jax.vmap(jax.vmap(resolver))(read_locs, readers)
+    flat = jax.vmap(resolver)(read_locs.reshape(-1), readers.reshape(-1))
+    res = jax.tree_util.tree_map(lambda a: a.reshape(read_locs.shape), flat)
     empty = read_locs == NO_LOC
     was_storage = read_writer == STORAGE
     ok_storage = was_storage & ~res.found                       # L68
@@ -162,25 +191,88 @@ def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
     return read_ok.all(axis=-1)
 
 
+def _validate_dirty(state: EngineState, cfg: EngineConfig) -> jax.Array:
+    """Full-validation semantics at dirty-row cost (dirty-region skip).
+
+    A row may skip validation iff, for every live read, the version of the
+    read location's region equals the version the row last validated against
+    (``read_region_ver``).  Version bumps cover every way a resolution can
+    change — index-entry changes via ``backend.update``'s dirty regions,
+    estimate/incarnation restamps via the writer's own write regions (update
+    for re-executions, :func:`_validate_all`'s post-abort bump for validation
+    failures) — so a clean row would revalidate to exactly its recorded
+    reads: skipping it is not an approximation.
+
+    The rows that do need work are gathered into a ``cfg.dirty_cap()``-row
+    batch (same O(n) nonzero machinery as the wave selection); waves that
+    dirty more rows than the cap fall back to the full O(n·R) pass via
+    ``lax.cond``, so the skip is never unsound and never more than one full
+    validation.  Returns the ``(n,)`` fail mask.
+    """
+    n, r = cfg.n_txns, cfg.max_reads
+    backend = mv.make_backend(cfg)
+    cur = state.index.version
+    regions = backend.region_of(state.read_locs)
+    live = state.read_locs != NO_LOC
+    stale_read = live & (state.read_region_ver != cur[regions])
+    need = state.executed & stale_read.any(axis=-1)
+    k = cfg.dirty_cap()
+
+    def full_path(_):
+        readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                                   (n, r))
+        valid = _read_set_valid(state, cfg, state.read_locs,
+                                state.read_writer, state.read_inc, readers)
+        return state.executed & ~valid
+
+    if k >= n:
+        # A capacity covering every row can never narrow the work: the cond
+        # predicate would always take the gather path, paying its
+        # nonzero/gather/scatter machinery on top of full-width validation.
+        return full_path(None)
+
+    def gather_path(_):
+        (rows,) = jnp.nonzero(need, size=k, fill_value=n)
+        rows = rows.astype(jnp.int32)
+        readers = jnp.broadcast_to(rows[:, None], (k, r))
+        # Fill lanes (= n) gather-clip to row n-1 and produce garbage
+        # verdicts; the scatter drops them (out-of-bounds row n).
+        valid_k = _read_set_valid(state, cfg, state.read_locs[rows],
+                                  state.read_writer[rows],
+                                  state.read_inc[rows], readers)
+        return jnp.zeros((n,), jnp.bool_).at[rows].set(~valid_k,
+                                                       mode="drop") & need
+
+    return jax.lax.cond(need.sum() <= k, gather_path, full_path, None)
+
+
 def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     """Validate executed txns against the fresh index (paper:
     validate_read_set + finish_validation).
 
     With ``validation_window == 0`` every executed txn is re-validated each
-    wave (conservative BSP).  With ``vw > 0`` only the txns in
-    [frontier, frontier + vw) are validated — the BSP analogue of the paper's
-    ``validation_idx`` sweep: validation effort concentrates just above the
-    commit frontier and moves up with it.  Safety is unchanged because the
-    frontier only ever advances across txns validated in the current wave.
+    wave (conservative BSP) — unless ``dirty_validation`` holds, in which
+    case rows whose every read region is version-clean since their last
+    validation are skipped with unchanged semantics (:func:`_validate_dirty`).
+    With ``vw > 0`` only the txns in [frontier, frontier + vw) are validated
+    — the BSP analogue of the paper's ``validation_idx`` sweep: validation
+    effort concentrates just above the commit frontier and moves up with it.
+    Safety is unchanged because the frontier only ever advances across txns
+    validated in the current wave.
     """
     n, r = cfg.n_txns, cfg.max_reads
     vw = cfg.validation_window
+    skip = _skip_enabled(cfg)
     if vw <= 0 or vw >= n:
-        readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
-                                   (n, r))
-        valid = _read_set_valid(state, cfg, state.read_locs,
-                                state.read_writer, state.read_inc, readers)
-        fail = state.executed & ~valid
+        if skip:
+            fail = _validate_dirty(state, cfg)
+        else:
+            readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
+                                       (n, r))
+            valid = _read_set_valid(state, cfg, state.read_locs,
+                                    state.read_writer, state.read_inc,
+                                    readers)
+            fail = state.executed & ~valid
         ok_for_commit = state.executed & ~fail
     else:
         start = jnp.minimum(state.frontier, n - vw)
@@ -199,6 +291,28 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
         below = jnp.arange(n, dtype=jnp.int32) < state.frontier
         ok_for_commit = state.executed & ~fail & (in_window | below)
 
+    if skip:
+        backend = mv.make_backend(cfg)
+        cur = state.index.version
+        regions = backend.region_of(state.read_locs)
+        # Rows that remain executed were either validated this wave or
+        # provably clean — either way their reads are now known to resolve
+        # under the CURRENT (pre-bump) region versions.
+        ok_rows = state.executed & ~fail
+        rrv = jnp.where(ok_rows[:, None], cur[regions],
+                        state.read_region_ver)
+        # A validation abort flips the failing txn's write set to ESTIMATE
+        # without touching any index entry: bump its write regions so rows
+        # reading them revalidate next wave (bump AFTER the rrv refresh —
+        # this wave validated against the pre-flip stamps).
+        flocs = jnp.where(fail[:, None], state.write_locs, NO_LOC)
+        bump = mv.dirty_from_delta(backend.n_regions, backend.region_of,
+                                   flocs, flocs)
+        state = state._replace(
+            read_region_ver=rrv,
+            index=state.index._replace(
+                version=cur + bump.astype(jnp.int32)))
+
     state = state._replace(
         estimate=state.estimate | fail,
         executed=state.executed & ~fail,
@@ -211,13 +325,64 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     return state._replace(frontier=frontier)
 
 
-def _wave_step(state: EngineState, program: TxnProgram, params: Any,
-               storage: jax.Array, cfg: EngineConfig) -> EngineState:
+class WaveDelta(NamedTuple):
+    """One wave's write-set delta: what :func:`_index_phase` needs to merge
+    the wave into the MV index incrementally (all no-op lanes carry txn id
+    ``n`` / NO_LOC rows, so backends can scatter-and-drop blindly)."""
+
+    txn_ids: jax.Array         # (window,) i32 successful lanes' txn ids, else n
+    old_write_locs: jax.Array  # (window, W) pre-wave live write sets, else NO_LOC
+    new_write_locs: jax.Array  # (window, W) fresh write sets, else NO_LOC
+    read_locs: jax.Array       # (window, R) fresh read sets (raw lanes)
+    ver0: jax.Array            # (n_regions,) index version the wave read against
+
+
+def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
+                   storage: jax.Array,
+                   cfg: EngineConfig) -> tuple[EngineState, WaveDelta]:
+    """Select + execute + apply one wave; capture its delta for the index."""
     active_ids, active_mask = _select_wave(state, cfg)
     res = _execute_wave(state, active_ids, program, params, storage, cfg)
-    state = _apply_results(state, active_ids, active_mask, res, cfg)
-    state = state._replace(
-        index=mv.make_backend(cfg).build(state.write_locs))
+    success = active_mask & ~res.blocked
+    delta = WaveDelta(
+        txn_ids=jnp.where(success, active_ids, cfg.n_txns),
+        old_write_locs=jnp.where(success[:, None],
+                                 state.write_locs[active_ids], NO_LOC),
+        new_write_locs=jnp.where(success[:, None], res.write_locs, NO_LOC),
+        read_locs=res.read_locs,
+        ver0=state.index.version,
+    )
+    return _apply_results(state, active_ids, active_mask, res, cfg), delta
+
+
+def _index_phase(state: EngineState, delta: WaveDelta,
+                 cfg: EngineConfig) -> EngineState:
+    """Fold the wave into the MV index: incremental delta merge (default) or
+    the full-rebuild reference path, plus per-read region-version recording
+    for the dirty-validation skip."""
+    backend = mv.make_backend(cfg)
+    if cfg.mv_update == "incremental":
+        index, _ = backend.update(state.index, state.write_locs,
+                                  delta.txn_ids, delta.old_write_locs,
+                                  delta.new_write_locs)
+    else:
+        index = backend.build(state.write_locs)
+    state = state._replace(index=index)
+    if _skip_enabled(cfg):
+        # Fresh rows resolved their reads against the wave-start versions
+        # (ver0); record those so validation can tell whether anything a row
+        # read has since moved.  No-op lanes scatter to row n and drop.
+        rrv = delta.ver0[backend.region_of(delta.read_locs)]
+        state = state._replace(
+            read_region_ver=state.read_region_ver.at[delta.txn_ids].set(
+                rrv, mode="drop"))
+    return state
+
+
+def _wave_step(state: EngineState, program: TxnProgram, params: Any,
+               storage: jax.Array, cfg: EngineConfig) -> EngineState:
+    state, delta = _execute_phase(state, program, params, storage, cfg)
+    state = _index_phase(state, delta, cfg)
     state = _validate_all(state, cfg)
     return state._replace(wave=state.wave + 1)
 

@@ -19,7 +19,9 @@ the shard-local key encoding and its overflow math, and how to add a backend.
 """
 from __future__ import annotations
 
-from repro.core.mv.base import MVBackend, ReadResolution, Resolver, resolve_value
+from repro.core.mv.base import (MVBackend, ReadResolution, Resolver,
+                                dirty_from_delta, resolve_value,
+                                update_by_rebuild)
 from repro.core.mv.dense import DenseBackend, DenseIndex
 from repro.core.mv.sharded import ShardedBackend, ShardedIndex, shard_plan
 from repro.core.mv.sorted_index import SortedBackend, SortedIndex
@@ -40,13 +42,15 @@ def make_backend(cfg) -> MVBackend:
         return DenseBackend(n_txns=cfg.n_txns, n_locs=cfg.n_locs,
                             use_pallas=cfg.use_pallas)
     if cfg.backend == "sharded":
-        return ShardedBackend.from_universe(cfg.n_txns, cfg.n_locs,
-                                            cfg.n_shards)
+        return ShardedBackend.from_universe(
+            cfg.n_txns, cfg.n_locs, cfg.n_shards,
+            resolver_impl=cfg.resolver_impl)
     raise ValueError(f"unknown MV backend {cfg.backend!r}; "
                      f"expected one of {BACKENDS}")
 
 
 __all__ = ["MVBackend", "ReadResolution", "Resolver", "resolve_value",
+           "dirty_from_delta", "update_by_rebuild",
            "SortedBackend", "SortedIndex", "DenseBackend", "DenseIndex",
            "ShardedBackend", "ShardedIndex", "shard_plan", "BACKENDS",
            "make_backend"]

@@ -7,22 +7,53 @@ ESTIMATE flag.  Everything else in the engine (dependency registration,
 validation, the commit frontier, snapshots) consumes only the answer, never
 the data structure that produced it.
 
-This module pins down that seam.  A backend is an object with two methods:
+This module pins down that seam.  A backend is an object with three methods:
 
 * ``build(write_locs) -> index``     — turn the block's ``(n, W)`` live write
   slots into whatever pytree of arrays the backend searches.  Called once at
-  engine init and once per wave (after write sets change); the pytree rides
-  in the ``lax.while_loop`` carry, so its structure and shapes must be fixed
-  for a given :class:`~repro.core.types.EngineConfig`.
+  engine init (and per wave on the ``mv_update='rebuild'`` reference path);
+  the pytree rides in the ``lax.while_loop`` carry, so its structure and
+  shapes must be fixed for a given :class:`~repro.core.types.EngineConfig`.
+* ``update(index, write_locs, txn_ids, old_write_locs, new_write_locs) ->
+  (index, dirty_regions)`` — apply one wave's write-set delta *incrementally*:
+  drop the stale entries of the transactions in ``txn_ids`` (their previous
+  live write sets arrive as ``old_write_locs``) and insert their new write
+  sets (``new_write_locs``).  ``write_locs`` is the full post-wave ``(n, W)``
+  matrix, so ``build(write_locs)``-based shims are always a correct fallback;
+  the result must be **byte-identical** (keys/txn/slot) to that fresh build.
+  ``dirty_regions`` is an ``(n_regions,)`` bool mask of regions whose
+  resolution may have changed this wave; the returned index's ``version``
+  field is the old version + dirty (see below).
 * ``make_resolver(index, write_locs, estimate, incarnation) -> resolver`` —
   close over the current MV state and return ``resolver(loc, reader) ->
   ReadResolution``, a scalar function the engine vmaps over reads, read-set
   validation rows, and the final snapshot.
 
+Regions and versions
+--------------------
+Every backend partitions the location universe into ``n_regions`` contiguous
+regions (flat backends have exactly one; ``sharded`` has one per shard) and
+exposes ``region_of(locs)``, the vectorized location→region map.  Every index
+pytree carries a ``version`` field — an ``(n_regions,)`` int32 counter that
+``update`` increments for each dirty region.  The contract the engine's
+dirty-region validation skip relies on (see ``engine._validate_dirty``):
+
+    a read's resolution — found/writer/slot *and* the writer's incarnation
+    and ESTIMATE stamps — can only change between two points in time if the
+    version of the read location's region differs between them.
+
+``update`` guarantees this for index-content changes because a changed txn's
+stale entries live exactly at its ``old_write_locs`` (the caller must pass
+the txns' true pre-update live write sets) and its fresh entries at
+``new_write_locs`` — both are folded into ``dirty_regions``.  Estimate flips
+from *validation* aborts change no index entry, so the engine bumps those
+versions itself (the aborted txns' write regions) via ``region_of``.
+
 Backends registered in :mod:`repro.core.mv` (``sorted`` / ``dense`` /
-``sharded``) are interchangeable: the backend-equivalence property suite
-(``tests/test_mv_backends.py``) checks byte-identical snapshots AND identical
-abort/wave statistics, i.e. resolution-for-resolution agreement.
+``sharded``) are interchangeable: the backend-equivalence property suites
+(``tests/test_mv_backends.py``, ``tests/test_mv_incremental.py``) check
+byte-identical snapshots AND identical abort/wave statistics, i.e.
+resolution-for-resolution agreement, on both the build and update paths.
 """
 from __future__ import annotations
 
@@ -31,7 +62,7 @@ from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import STORAGE
+from repro.core.types import NO_LOC, STORAGE
 
 
 class ReadResolution(NamedTuple):
@@ -54,14 +85,69 @@ class MVBackend(Protocol):
 
     name: str
 
+    @property
+    def n_regions(self) -> int:
+        """Static region count (1 for flat backends, n_shards for sharded)."""
+        ...
+
+    def region_of(self, locs: jax.Array) -> jax.Array:
+        """Vectorized location -> region id map (callers mask NO_LOC)."""
+        ...
+
     def build(self, write_locs: jax.Array) -> Any:
         """(n, W) int32 live write locations -> index pytree (arrays only)."""
+        ...
+
+    def update(self, index: Any, write_locs: jax.Array, txn_ids: jax.Array,
+               old_write_locs: jax.Array,
+               new_write_locs: jax.Array) -> tuple[Any, jax.Array]:
+        """Incremental per-wave delta (see module docstring).
+
+        ``txn_ids`` is ``(window,)`` int32 with ``n_txns`` marking no-op fill
+        lanes; ``old_write_locs``/``new_write_locs`` are ``(window, W)`` with
+        all-NO_LOC rows for no-op lanes.  Returns ``(index, dirty_regions)``
+        with keys/txn/slot byte-identical to ``build(write_locs)``.
+        """
         ...
 
     def make_resolver(self, index: Any, write_locs: jax.Array,
                       estimate: jax.Array, incarnation: jax.Array) -> Resolver:
         """Close over the current MV state; return the per-read resolver."""
         ...
+
+
+def dirty_from_delta(n_regions: int, region_of, old_write_locs: jax.Array,
+                     new_write_locs: jax.Array) -> jax.Array:
+    """(n_regions,) bool: regions touched by any live old or new write loc.
+
+    This is the shared dirty-region rule: a changed txn's resolution footprint
+    is exactly the union of its old entries (dropped — and the txn's estimate/
+    incarnation stamps hang off them) and its new entries (inserted).
+    """
+    def touched(locs):
+        flat = locs.reshape(-1)
+        live = flat != NO_LOC
+        region = jnp.where(live, region_of(flat), n_regions)  # dead -> dropped
+        return jnp.zeros((n_regions,), jnp.bool_).at[region].set(True,
+                                                                 mode="drop")
+
+    return touched(old_write_locs) | touched(new_write_locs)
+
+
+def update_by_rebuild(backend, index: Any, write_locs: jax.Array,
+                      old_write_locs: jax.Array,
+                      new_write_locs: jax.Array) -> tuple[Any, jax.Array]:
+    """Reference ``update`` shim: full rebuild + version carry.
+
+    Correct for every backend (the incremental paths must match it byte for
+    byte); the flat ``sorted``/``dense`` backends use it directly so the
+    engine's update code path is backend-agnostic.
+    """
+    dirty = dirty_from_delta(backend.n_regions, backend.region_of,
+                             old_write_locs, new_write_locs)
+    fresh = backend.build(write_locs)
+    return fresh._replace(version=index.version + dirty.astype(jnp.int32)), \
+        dirty
 
 
 def finalize_resolution(found: jax.Array, txn_entry: jax.Array,

@@ -9,17 +9,18 @@ reference backend.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import ReadResolution
+from repro.core.mv.base import ReadResolution, update_by_rebuild
 from repro.core.types import NO_LOC, STORAGE
 
 
 class DenseIndex(NamedTuple):
     last_writer: jax.Array   # (n+1, L) i32 exclusive running argmax, -1 = none
+    version: Any = None      # (1,) i32 region version (single flat region)
 
 
 def dense_last_writer(write_locs: jax.Array, n_locs: int, *,
@@ -71,9 +72,23 @@ class DenseBackend:
     use_pallas: bool = False
     name: str = dataclasses.field(default="dense", init=False)
 
+    @property
+    def n_regions(self) -> int:
+        return 1            # one flat region: any write-set change is dirty
+
+    def region_of(self, locs: jax.Array) -> jax.Array:
+        return jnp.zeros_like(locs)
+
     def build(self, write_locs: jax.Array) -> DenseIndex:
         return DenseIndex(dense_last_writer(write_locs, self.n_locs,
-                                            use_pallas=self.use_pallas))
+                                            use_pallas=self.use_pallas),
+                          version=jnp.zeros((1,), jnp.int32))
+
+    def update(self, index: DenseIndex, write_locs: jax.Array,
+               txn_ids: jax.Array, old_write_locs: jax.Array,
+               new_write_locs: jax.Array) -> tuple[DenseIndex, jax.Array]:
+        return update_by_rebuild(self, index, write_locs, old_write_locs,
+                                 new_write_locs)
 
     def make_resolver(self, index: DenseIndex, write_locs: jax.Array,
                       estimate: jax.Array, incarnation: jax.Array):

@@ -1,4 +1,4 @@
-"""Sharded MV backend: per-region sorted indexes with shard-local int32 keys.
+"""Sharded MV backend: CSR-flat per-region sorted index, shard-local keys.
 
 The flat ``sorted`` backend encodes a write slot as ``loc*(n_txns+1)+writer``
 in int32, silently capping the location universe at ``~2^31/(n_txns+1)``
@@ -15,28 +15,38 @@ so int32 keying survives arbitrarily large global universes as long as
 size to the *region* size, which the operator controls via ``n_shards``
 (:class:`~repro.core.types.EngineConfig` validates it at construction).
 
-Layout: one ``(n_shards, n*W)`` row-sorted key matrix (each row padded with
-+inf), built by one lexsort over (shard, local key) plus a scatter.  A read
-gathers its shard row by ``loc // shard_size`` and binary-searches it — the
-vmapped per-shard ``searchsorted`` is hand-rolled (:func:`row_searchsorted`)
-so that under ``vmap`` each step is one scalar gather per lane instead of a
-materialized ``(reads, n*W)`` row gather (the 10M-location snapshot would
-otherwise allocate tens of GB).
+Layout (CSR over regions): ONE ``(cap,)`` entry list (``cap = n*W``) sorted
+by ``(shard, local key)``, live entries first, dead slots normalized to a
+``(KEY_MAX, 0)`` tail; a ``(n_shards+1,)`` ``starts`` array bounds each
+region's segment.  A read gathers its segment bounds and binary-searches
+inside them (:func:`segment_searchsorted` — one scalar gather per bisection
+step under ``vmap``, never a materialized row).  Writer txn and write slot
+are packed into one int32 (``txn*W + slot``), so the whole index is two flat
+int32 arrays + the tiny offsets — S× smaller than a per-region row matrix
+and, more importantly, *maintainable by streaming ops*:
+
+:meth:`ShardedBackend.update` applies a wave's write-set delta in O(cap)
+streaming work + O(window*W · log cap) searches, with NO O(cap)-element sort
+and NO O(cap)-element scatter (XLA CPU scatters cost ~100ns/element — the
+measured reason a row-matrix delta merge LOST to its own rebuild).  All
+positional bookkeeping happens on the ``window*W`` event lists; the flat
+output is then produced by one cumsum (the merge offset array) and two
+clamp-gathers.  See the method docstring for the event algebra.
 
 Region partitioning by address range mirrors object-granularity STM designs
 for smart contracts (Dickerson et al.; Anjana et al.) and is the structural
-seam for multi-device execution: each region's index is independent, so a
+seam for multi-device execution: each region's segment is independent, so a
 future PR can ``shard_map`` regions across devices with resolution unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import finalize_resolution
+from repro.core.mv.base import dirty_from_delta, finalize_resolution
 from repro.core.types import NO_LOC
 
 _KEY_MAX = jnp.iinfo(jnp.int32).max
@@ -74,103 +84,244 @@ def shard_plan(n_locs: int, n_txns: int, n_shards: int = 0) -> tuple[int, int]:
 
 
 class ShardedIndex(NamedTuple):
-    """Per-shard sorted indexes, one row per region (arrays only).
+    """CSR-flat per-region sorted index (arrays only).
 
-    Every row holds ALL ``n*W`` slots' worth of capacity (a single region may
-    absorb every write in the block); slots outside the row's region are
-    padded to +inf, so each row is independently binary-searchable.
+    ``keys[starts[s]:starts[s+1]]`` is region ``s``'s ascending local-key
+    segment; all dead capacity is one normalized ``(KEY_MAX, 0)`` tail after
+    ``starts[n_shards]``.  ``packed = writer*W + slot`` (W = max_writes).
     """
 
-    keys: jax.Array      # (n_shards, n*W) i32 row-sorted local keys, dead=+inf
-    txn: jax.Array       # (n_shards, n*W) i32 writer txn per entry
-    slot: jax.Array      # (n_shards, n*W) i32 writer's write slot per entry
+    keys: jax.Array      # (n*W,) i32 segment-sorted local keys, dead = +inf
+    packed: jax.Array    # (n*W,) i32 writer*W + slot per entry, dead = 0
+    starts: jax.Array    # (n_shards+1,) i32 segment offsets; [-1] = total live
+    version: Any = None  # (n_shards,) i32 region version (bumped when dirty)
 
 
-def row_searchsorted(keys: jax.Array, row: jax.Array, q: jax.Array) -> jax.Array:
-    """``searchsorted(keys[row], q, side='left')`` without materializing the row.
+def segment_searchsorted(keys: jax.Array, lo: jax.Array, hi: jax.Array,
+                         q: jax.Array) -> jax.Array:
+    """``lo + searchsorted(keys[lo:hi], q, side='left')`` without slicing.
 
-    Vmapped over (row, q) pairs this lowers to one scalar 2-D gather per
-    binary-search step — O(log cap) gathers per read, no (reads, cap)
-    intermediate.
+    Vmapped over (lo, hi, q) triples this lowers to one scalar gather per
+    bisection step — O(log cap) gathers per read, no (reads, cap)
+    intermediate.  This is the region-resolve hot loop the
+    ``mv_region_resolve`` Pallas kernel batches on TPU.
     """
-    cap = keys.shape[1]
-    steps = max(cap, 1).bit_length() + 1   # halves [0, cap] to an empty interval
+    cap = keys.shape[0]
+    steps = max(cap, 1).bit_length() + 1   # halves [lo, hi] to empty
 
     def body(_, lohi):
-        lo, hi = lohi
-        mid = (lo + hi) // 2               # in-bounds whenever lo < hi
-        go_right = (keys[row, mid] < q) & (lo < hi)
-        go_left = (keys[row, mid] >= q) & (lo < hi)
-        return (jnp.where(go_right, mid + 1, lo), jnp.where(go_left, mid, hi))
+        lo_, hi_ = lohi
+        mid = (lo_ + hi_) // 2             # in-bounds whenever lo_ < hi_
+        go_right = (keys[mid] < q) & (lo_ < hi_)
+        go_left = (keys[mid] >= q) & (lo_ < hi_)
+        return (jnp.where(go_right, mid + 1, lo_),
+                jnp.where(go_left, mid, hi_))
 
-    lo = jnp.zeros_like(q)
-    hi = jnp.full_like(q, cap)
     lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
     return lo
 
 
+def row_searchsorted(keys: jax.Array, row: jax.Array, q: jax.Array) -> jax.Array:
+    """``searchsorted(keys[row], q, side='left')`` for a (rows, cap) matrix.
+
+    Legacy 2-D form of :func:`segment_searchsorted` (the PR 3 row-matrix
+    layout); kept for its tests and as a reference oracle.
+    """
+    cap = keys.shape[1]
+    flat = keys.reshape(-1)
+    lo = row * cap
+    return segment_searchsorted(flat, lo, lo + cap, q) - lo
+
+
+def _encode(write_locs: jax.Array, txn_ids: jax.Array, n_txns: int,
+            shard_size: int, n_shards: int):
+    """(rows, W) locs + (rows,) writer ids -> sorted (shard, key, packed).
+
+    Dead slots (NO_LOC or writer >= n_txns) get ``(n_shards, KEY_MAX, 0)``
+    and sort last; ``jnp.lexsort`` is stable, so equal keys (one txn writing
+    one loc from two slots) stay in slot-minor order — the tie order every
+    build and update below must share for byte-identity.
+    """
+    rows, w = write_locs.shape
+    flat = write_locs.reshape(-1)
+    writer = jnp.broadcast_to(txn_ids[:, None], (rows, w)).reshape(-1)
+    slot = jnp.broadcast_to(
+        jnp.arange(w, dtype=jnp.int32)[None, :], (rows, w)).reshape(-1)
+    live = (flat != NO_LOC) & (writer >= 0) & (writer < n_txns)
+    shard = jnp.where(live, flat // shard_size, n_shards)
+    lkey = jnp.where(live, (flat - shard * shard_size) * (n_txns + 1) + writer,
+                     _KEY_MAX)
+    order = jnp.lexsort((lkey, shard))
+    packed = jnp.where(live, writer * w + slot, 0)
+    return shard[order], lkey[order], packed[order], live[order]
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedBackend:
-    """MVBackend over region-partitioned sorted indexes (see module docstring)."""
+    """MVBackend over the CSR-flat region index (see module docstring)."""
 
     n_txns: int
     n_locs: int
     n_shards: int            # resolved (positive) shard count
     shard_size: int          # ceil(n_locs / n_shards); local keys fit int32
+    resolver_impl: str = "xla"   # 'xla' (segment_searchsorted) | 'pallas'
     name: str = dataclasses.field(default="sharded", init=False)
 
     @classmethod
-    def from_universe(cls, n_txns: int, n_locs: int,
-                      n_shards: int = 0) -> "ShardedBackend":
+    def from_universe(cls, n_txns: int, n_locs: int, n_shards: int = 0,
+                      resolver_impl: str = "xla") -> "ShardedBackend":
         n_shards, shard_size = shard_plan(n_locs, n_txns, n_shards)
         return cls(n_txns=n_txns, n_locs=n_locs, n_shards=n_shards,
-                   shard_size=shard_size)
+                   shard_size=shard_size, resolver_impl=resolver_impl)
+
+    @property
+    def n_regions(self) -> int:
+        return self.n_shards
+
+    def region_of(self, locs: jax.Array) -> jax.Array:
+        """Location -> region id.  NO_LOC maps into range (callers mask it)."""
+        return jnp.clip(locs // self.shard_size, 0, self.n_shards - 1)
 
     def build(self, write_locs: jax.Array) -> ShardedIndex:
         n, w = write_locs.shape
         if write_locs.dtype != jnp.int32:
             raise TypeError(f"write_locs must be int32, got {write_locs.dtype}")
-        total = n * w
-        flat = write_locs.reshape(-1)
-        writer = jnp.broadcast_to(
-            jnp.arange(n, dtype=jnp.int32)[:, None], (n, w)).reshape(-1)
-        slot = jnp.broadcast_to(
-            jnp.arange(w, dtype=jnp.int32)[None, :], (n, w)).reshape(-1)
-        live = flat != NO_LOC
-        # Dead slots route to the out-of-bounds row n_shards: they sort last
-        # and the scatter drops them.
-        shard = jnp.where(live, flat // self.shard_size, self.n_shards)
-        local = flat - shard * self.shard_size
-        lkey = jnp.where(live, local * (self.n_txns + 1) + writer, _KEY_MAX)
-        order = jnp.lexsort((lkey, shard))        # by shard, then local key
-        shard_s, lkey_s = shard[order], lkey[order]
-        starts = jnp.searchsorted(shard_s,
-                                  jnp.arange(self.n_shards, dtype=jnp.int32))
-        pos = (jnp.arange(total, dtype=jnp.int32)
-               - starts[jnp.clip(shard_s, 0, self.n_shards - 1)])
-        pad = jnp.full((self.n_shards, total), _KEY_MAX, jnp.int32)
-        zeros = jnp.zeros((self.n_shards, total), jnp.int32)
+        shard_s, lkey_s, packed_s, _ = _encode(
+            write_locs, jnp.arange(n, dtype=jnp.int32), self.n_txns,
+            self.shard_size, self.n_shards)
+        starts = jnp.searchsorted(
+            shard_s, jnp.arange(self.n_shards + 1, dtype=jnp.int32),
+            side="left").astype(jnp.int32)
+        return ShardedIndex(keys=lkey_s, packed=packed_s, starts=starts,
+                            version=jnp.zeros((self.n_shards,), jnp.int32))
+
+    def update(self, index: ShardedIndex, write_locs: jax.Array,
+               txn_ids: jax.Array, old_write_locs: jax.Array,
+               new_write_locs: jax.Array) -> tuple[ShardedIndex, jax.Array]:
+        """Event-merge delta: O(wave · log) bookkeeping, O(cap) streaming.
+
+        The merged flat list differs from the old one by at most
+        ``window*W`` dropped entries (the changed txns' stale keys, which sit
+        exactly at ``old_write_locs``) and ``window*W`` inserted ones — so
+        instead of re-sorting, the update computes the two event lists and
+        derives every output position from ONE prefix-summed offset array:
+
+        * stale events: each old live loc resolves (segment search) to its
+          flat position ``p``; since the searches are issued in sorted
+          (shard, key) order, ``p`` comes out ascending and ``a = p - rank``
+          is the entry's *kept-rank* boundary (duplicate keys — one txn, one
+          loc, two slots — are disambiguated by their stable query rank).
+        * new events: each new live key's insertion point ``q`` (segment
+          search into the OLD list) gives its kept-boundary
+          ``c = q - #stale(< q)``; with ``r`` its rank among the wave's
+          sorted new entries, its output position is ``t = c + r`` (survivors
+          vs. new entries have disjoint writers, so there are no cross ties).
+        * a stale skip at kept-rank ``a`` fires at output position
+          ``u = a + #new(c <= a)``.
+
+        Then ``src[j] = j + Σ[u <= j] - Σ[t <= j]`` — one small event
+        scatter + one ``(cap,)`` cumsum — and the output arrays are
+        ``where(is_new, new_vals, old[src])``: two clamp-gathers, with
+        ``src >= cap`` (net shrink) drawing the normalized dead pad.  Output
+        bytes match :meth:`build` on the post-wave write sets exactly;
+        ``tests/test_mv_incremental.py`` property-tests the identity, and the
+        engine's rebuild path stays available as ``mv_update='rebuild'``.
+
+        Contract: ``old_write_locs`` must be the changed txns' true
+        pre-update live write sets (that is what makes the stale searches
+        exact and ``dirty_regions`` cover every mutated segment).
+        """
+        n, w = write_locs.shape
+        S, cap = self.n_shards, n * w
+        wn = txn_ids.shape[0] * w
+        i32 = jnp.int32
+
+        # -- stale events -------------------------------------------------
+        os_, okey, _, olive = _encode(old_write_locs, txn_ids, self.n_txns,
+                                      self.shard_size, self.n_shards)
+        lo = index.starts[jnp.clip(os_, 0, S - 1)]
+        hi = index.starts[jnp.clip(os_, 0, S - 1) + 1]
+        p = jax.vmap(lambda l, h, q: segment_searchsorted(index.keys, l, h, q)
+                     )(lo, hi, okey)
+        # duplicate (shard, key) queries hit adjacent entries: offset by the
+        # rank within the equal-query group (stable order = slot-minor)
+        iw = jnp.arange(wn, dtype=i32)
+        grp_new = (iw == 0) | (os_ != jnp.roll(os_, 1)) | \
+            (okey != jnp.roll(okey, 1))
+        dup = iw - jax.lax.cummax(jnp.where(grp_new, iw, 0))
+        p = jnp.where(olive, p + dup, cap)            # dead -> inert tail
+        a = p - jnp.cumsum(olive.astype(i32)) + olive  # kept-rank boundary
+
+        # -- new events ---------------------------------------------------
+        ns_, nkey, npack, nlive = _encode(new_write_locs, txn_ids,
+                                          self.n_txns, self.shard_size,
+                                          self.n_shards)
+        lo = index.starts[jnp.clip(ns_, 0, S - 1)]
+        hi = index.starts[jnp.clip(ns_, 0, S - 1) + 1]
+        q = jax.vmap(lambda l, h, k: segment_searchsorted(index.keys, l, h, k)
+                     )(lo, hi, nkey)
+        c = jnp.where(nlive, q - jnp.searchsorted(p, q, side="left"), cap + wn)
+        r = jnp.cumsum(nlive.astype(i32)) - 1
+        t = jnp.where(nlive, c + r, cap + wn)          # new output positions
+        u = jnp.where(olive, a + jnp.searchsorted(c, a, side="right"),
+                      cap + wn)                        # stale skip positions
+
+        # -- merge offset + output streams --------------------------------
+        delta = jnp.zeros((cap + 1,), i32).at[u].add(1, mode="drop") \
+                                          .at[t].add(-1, mode="drop")
+        src = jnp.arange(cap, dtype=i32) + jnp.cumsum(delta[:cap])
+        is_new = jnp.zeros((cap,), jnp.bool_).at[t].set(True, mode="drop")
+        new_id = jnp.zeros((cap,), i32).at[t].set(iw, mode="drop")
+        srcc = jnp.clip(src, 0, cap - 1)
+        run_off = src >= cap                           # net shrink: dead pad
+        out_keys = jnp.where(is_new, nkey[new_id],
+                             jnp.where(run_off, _KEY_MAX, index.keys[srcc]))
+        out_pack = jnp.where(is_new, npack[new_id],
+                             jnp.where(run_off, 0, index.packed[srcc]))
+
+        # -- segment offsets + dirty regions ------------------------------
+        dsize = jnp.zeros((S,), i32) \
+            .at[os_].add(-olive.astype(i32), mode="drop") \
+            .at[ns_].add(nlive.astype(i32), mode="drop")
+        starts = index.starts.at[1:].add(jnp.cumsum(dsize))
+        dirty = dirty_from_delta(S, self.region_of, old_write_locs,
+                                 new_write_locs)
         return ShardedIndex(
-            keys=pad.at[shard_s, pos].set(lkey_s, mode="drop"),
-            txn=zeros.at[shard_s, pos].set(writer[order], mode="drop"),
-            slot=zeros.at[shard_s, pos].set(slot[order], mode="drop"),
-        )
+            keys=out_keys, packed=out_pack, starts=starts,
+            version=index.version + dirty.astype(i32)), dirty
 
     def make_resolver(self, index: ShardedIndex, write_locs: jax.Array,
                       estimate: jax.Array, incarnation: jax.Array):
         n1 = self.n_txns + 1
+        w = write_locs.shape[1]
+        if self.resolver_impl == "pallas":
+            # Batches the segment binary search on TPU
+            # (kernels/mv_region_resolve) via custom_vmap: scalar calls still
+            # run segment_searchsorted, but the engine's vmapped reads hit
+            # the Pallas kernel.  Lazy import: the kernel package depends on
+            # this module for its XLA reference.
+            from repro.kernels.mv_region_resolve import ops as rr_ops
+            search = rr_ops.batchable_segment_searchsorted
+        elif self.resolver_impl == "xla":
+            search = segment_searchsorted
+        else:
+            raise ValueError(
+                f"unknown resolver_impl {self.resolver_impl!r}; "
+                f"expected 'xla' or 'pallas'")
 
         def resolver(loc, reader):
             in_universe = (loc >= 0) & (loc < self.n_locs)
             shard = jnp.clip(loc // self.shard_size, 0, self.n_shards - 1)
             local = loc - shard * self.shard_size
+            lo = index.starts[shard]
+            hi = index.starts[shard + 1]
             # Highest local key strictly below local*(n+1)+reader, same loc.
-            pos = row_searchsorted(index.keys, shard, local * n1 + reader) - 1
-            safe = jnp.maximum(pos, 0)
-            key = index.keys[shard, safe]
-            found = (pos >= 0) & (key // n1 == local) & in_universe
-            return finalize_resolution(found, index.txn[shard, safe],
-                                       index.slot[shard, safe], estimate,
-                                       incarnation)
+            pos = search(index.keys, lo, hi, local * n1 + reader) - 1
+            safe = jnp.clip(pos, 0, index.keys.shape[0] - 1)
+            key = index.keys[safe]
+            entry = index.packed[safe]
+            found = (pos >= lo) & (key // n1 == local) & in_universe
+            return finalize_resolution(found, entry // w, entry % w,
+                                       estimate, incarnation)
 
         return resolver

@@ -11,12 +11,13 @@ backend (shard-local keys).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import ReadResolution, finalize_resolution
+from repro.core.mv.base import (ReadResolution, finalize_resolution,
+                                update_by_rebuild)
 from repro.core.types import NO_LOC
 
 _KEY_MAX = jnp.iinfo(jnp.int32).max
@@ -28,6 +29,7 @@ class SortedIndex(NamedTuple):
     keys: jax.Array      # (n*W,) i32 ascending loc*(n+1)+writer; dead = +inf
     txn: jax.Array       # (n*W,) i32 writer txn index per sorted entry
     slot: jax.Array      # (n*W,) i32 writer's write slot per sorted entry
+    version: Any = None  # (1,) i32 region version (single flat region)
 
 
 def sort_write_slots(write_locs: jax.Array, n_txns: int) -> SortedIndex:
@@ -70,8 +72,22 @@ class SortedBackend:
     n_txns: int
     name: str = dataclasses.field(default="sorted", init=False)
 
+    @property
+    def n_regions(self) -> int:
+        return 1            # one flat region: any write-set change is dirty
+
+    def region_of(self, locs: jax.Array) -> jax.Array:
+        return jnp.zeros_like(locs)
+
     def build(self, write_locs: jax.Array) -> SortedIndex:
-        return sort_write_slots(write_locs, self.n_txns)
+        idx = sort_write_slots(write_locs, self.n_txns)
+        return idx._replace(version=jnp.zeros((1,), jnp.int32))
+
+    def update(self, index: SortedIndex, write_locs: jax.Array,
+               txn_ids: jax.Array, old_write_locs: jax.Array,
+               new_write_locs: jax.Array) -> tuple[SortedIndex, jax.Array]:
+        return update_by_rebuild(self, index, write_locs, old_write_locs,
+                                 new_write_locs)
 
     def make_resolver(self, index: SortedIndex, write_locs: jax.Array,
                       estimate: jax.Array, incarnation: jax.Array):

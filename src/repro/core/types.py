@@ -43,12 +43,38 @@ class EngineConfig:
     use_pallas: bool = False     # dense backend: pallas mv_resolve (interpret on CPU)
     n_shards: int = 0            # sharded backend: region count (0 = fewest
                                  # shards keeping shard-local keys in int32)
+    mv_update: str = "incremental"   # per-wave index maintenance:
+                                 # 'incremental' = backend.update (delta merge,
+                                 # O(wave) sort work) | 'rebuild' = backend.build
+                                 # (O(block); the reference semantics)
+    dirty_validation: bool = True    # skip re-validating rows whose every read
+                                 # region is version-clean since their last
+                                 # validation (needs mv_update='incremental'
+                                 # and full validation, i.e. validation_window
+                                 # == 0; silently inert otherwise)
+    dirty_validation_cap: int = 0    # max rows validated per wave on the skip
+                                 # path before falling back to a full pass
+                                 # (0 = auto: min(n_txns, max(2*window, 64)))
+    resolver_impl: str = "xla"   # sharded backend read resolution: 'xla'
+                                 # (segment_searchsorted) | 'pallas'
+                                 # (kernels/mv_region_resolve; interpret off-TPU)
     track_write_stability: bool = True  # paper's wrote_new_location statistic
 
     def __post_init__(self):
         if self.backend not in ("sorted", "dense", "sharded"):
             raise ValueError(f"unknown MV backend {self.backend!r}; expected "
                              f"'sorted', 'dense', or 'sharded'")
+        if self.mv_update not in ("incremental", "rebuild"):
+            raise ValueError(f"unknown mv_update {self.mv_update!r}; expected "
+                             f"'incremental' or 'rebuild'")
+        if self.resolver_impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown resolver_impl {self.resolver_impl!r}; "
+                             f"expected 'xla' or 'pallas'")
+        if self.resolver_impl == "pallas" and self.backend != "sharded":
+            raise ValueError(
+                f"resolver_impl='pallas' is the sharded backend's region-"
+                f"resolve kernel; backend={self.backend!r} does not use it "
+                f"(the dense backend's kernel switch is use_pallas)")
         # Index keys are loc*(n+1)+writer in int32 (x64 is disabled).  The
         # flat backends key the whole universe; 'sharded' keys per region, so
         # only the region size is bounded (shard_plan validates it and raises
@@ -67,6 +93,12 @@ class EngineConfig:
     def waves_cap(self) -> int:
         return self.max_waves if self.max_waves > 0 else 2 * self.n_txns + 8
 
+    def dirty_cap(self) -> int:
+        """Row capacity of the dirty-validation gather path (resolved)."""
+        if self.dirty_validation_cap > 0:
+            return min(self.n_txns, self.dirty_validation_cap)
+        return min(self.n_txns, max(2 * self.window, 64))
+
 
 class EngineState(NamedTuple):
     """Carry of the wave loop. Shapes: n = n_txns, W = max_writes, R = max_reads."""
@@ -79,6 +111,9 @@ class EngineState(NamedTuple):
     read_locs: jax.Array         # (n, R) i32, NO_LOC = empty slot
     read_writer: jax.Array       # (n, R) i32, STORAGE = from storage
     read_inc: jax.Array          # (n, R) i32 incarnation of writer at read time
+    read_region_ver: jax.Array   # (n, R) i32 version of the read loc's MV
+                                 # region when the row was last resolved /
+                                 # validated (dirty-region validation skip)
     # -- Scheduler ----------------------------------------------------------
     incarnation: jax.Array       # (n,) i32: number of finished executions
     executed: jax.Array          # (n,) bool: has a live (non-aborted) result

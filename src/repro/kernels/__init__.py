@@ -3,7 +3,12 @@
 Each kernel ships as kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
 ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle):
 
-* mv_resolve      — Block-STM dense multi-version read-resolution table
-* flash_attention — FlashAttention-2 forward w/ GQA + causal (train & decode)
-* selective_scan  — Mamba-1 selective state-space scan
+* mv_resolve        — Block-STM dense multi-version read-resolution table
+                      (tiny universes: the (n+1, L) last-writer cummax)
+* mv_region_resolve — Block-STM sharded multi-version read resolution: the
+                      batched per-region segment search (keys resident in
+                      VMEM, queries streamed; gather-free compare-and-count),
+                      wired into the engine via EngineConfig.resolver_impl
+* flash_attention   — FlashAttention-2 forward w/ GQA + causal (train & decode)
+* selective_scan    — Mamba-1 selective state-space scan
 """

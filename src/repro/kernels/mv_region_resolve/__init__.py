@@ -1,0 +1,7 @@
+"""Region-resolve kernel: batched row binary search for the sharded MV backend.
+
+``kernel.py`` — Pallas TPU kernel (interpret-mode off-TPU), ``ref.py`` — pure
+jnp oracle, ``ops.py`` — public dispatch (``impl='xla' | 'pallas'``) plus the
+``custom_vmap`` wiring that lets the scalar resolver protocol batch into the
+kernel.  See ``kernel.py`` for the TPU mapping.
+"""

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: batched segment searchsorted (sharded MV resolve).
+
+The sharded MV backend answers a read by binary-searching ONE segment
+``keys[lo:hi]`` of its CSR-flat key list (``cap = n_txns*max_writes``
+entries), bounds chosen per query from the region offsets.  The XLA path
+(:func:`repro.core.mv.sharded.segment_searchsorted`) lowers, under ``vmap``,
+to one scalar gather per bisection step — O(log cap) *serialized* gathers
+per lane, a poor fit for the TPU's VPU, which has no vector-gather unit.
+
+TPU mapping
+-----------
+* The whole key list is staged in VMEM once (``cap`` int32; the engine's
+  real shapes — cap = n*W ≈ 1-32K — are far under the ~16 MiB budget;
+  :func:`segment_searchsorted_pallas` asserts it) and REUSED across every
+  grid step: queries stream, keys stay resident.
+* Grid over query tiles ``(block_q,)``.  Per tile the kernel runs one
+  compare-and-count pass: for a sorted segment,
+  ``searchsorted_left(keys[lo:hi], q) == Σ_c [lo <= c < hi][keys[c] < q]``,
+  so the whole answer is a broadcast compare of the resident keys against
+  the lane's ``(q, lo, hi)`` plus a row-sum — pure 8×128 VPU work, no
+  gather, no MXU.  This trades the un-vectorizable O(log cap) per-lane
+  gather chain for O(cap) per-lane VPU throughput — the standard TPU
+  exchange, and the reason the kernel wants the CSR layout (one flat pass)
+  rather than the old (S, cap) row matrix (S passes).
+
+Padding contract: dead key slots are +inf (``2^31-1``) and live queries are
+strictly below it (the shard-local key bound leaves ``n_txns`` of headroom),
+so column padding with +inf never perturbs a count; query-tile padding lanes
+carry ``lo = hi = 0`` and are sliced off by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_KEY_MAX = jnp.iinfo(jnp.int32).max
+_VMEM_KEY_BYTES = 8 * 2**20   # keys stay resident: keep them ≤ half of VMEM
+
+
+def _segment_search_kernel(keys_ref, lo_ref, hi_ref, qs_ref, out_ref):
+    keys = keys_ref[0, :]                       # (cap,) resident in VMEM
+    lo = lo_ref[0, :]                           # (block_q,)
+    hi = hi_ref[0, :]
+    qs = qs_ref[0, :]
+    col = jax.lax.broadcasted_iota(jnp.int32, (lo.shape[0], keys.shape[0]), 1)
+    in_seg = (col >= lo[:, None]) & (col < hi[:, None])
+    hit = in_seg & (keys[None, :] < qs[:, None])
+    out_ref[0, :] = lo + jnp.sum(hit.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def segment_searchsorted_pallas(keys: jax.Array, lo: jax.Array,
+                                hi: jax.Array, qs: jax.Array, *,
+                                block_q: int = 256,
+                                interpret: bool | None = None) -> jax.Array:
+    """``lo[i] + searchsorted(keys[lo[i]:hi[i]], qs[i], 'left')`` per query.
+
+    ``keys``: (cap,) int32, ascending within every [lo, hi) segment queried.
+    ``lo``/``hi``/``qs``: (Q,) int32.  ``interpret=None`` auto-selects:
+    compiled on TPU, interpreter elsewhere (bit-identical semantics).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    (cap,) = keys.shape
+    if cap * 4 > _VMEM_KEY_BYTES:
+        raise ValueError(
+            f"region keys ({cap} i32 = {cap * 4} bytes) exceed the "
+            f"{_VMEM_KEY_BYTES}-byte VMEM residency budget; shrink the "
+            f"block (n_txns*max_writes) or use resolver_impl='xla'")
+    (q_n,) = qs.shape
+    # Lane-align the resident key list and the query tiles.
+    keys_p = jnp.pad(keys, (0, (-cap) % 128),
+                     constant_values=_KEY_MAX)[None, :]
+    block_q = max(128, min(block_q, -(-q_n // 128) * 128))
+    pad_q = (-q_n) % block_q
+    lo_p = jnp.pad(lo, (0, pad_q)).reshape(-1, block_q)
+    hi_p = jnp.pad(hi, (0, pad_q)).reshape(-1, block_q)
+    qs_p = jnp.pad(qs, (0, pad_q)).reshape(-1, block_q)
+    grid = (qs_p.shape[0],)
+    out = pl.pallas_call(
+        _segment_search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(keys_p.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1, block_q), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_q), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_q), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qs_p.shape, jnp.int32),
+        interpret=interpret,
+    )(keys_p, lo_p, hi_p, qs_p)
+    return out.reshape(-1)[:q_n]

@@ -1,0 +1,68 @@
+"""Public wrapper for the region-resolve kernel + the resolver batching hook.
+
+Two entry points:
+
+* :func:`region_searchsorted` — explicit batched API with an ``impl=`` switch
+  (the ``flash_attention/ops.py`` convention): ``'xla'`` is the hand-rolled
+  :func:`~repro.core.mv.sharded.segment_searchsorted` bisection under
+  ``vmap`` (production CPU path, and the kernel's parity reference),
+  ``'pallas'`` the TPU kernel (interpret-mode off-TPU).
+* :func:`batchable_segment_searchsorted` — what
+  ``ShardedBackend.make_resolver(...)`` uses when
+  ``EngineConfig.resolver_impl == 'pallas'``.  The MVBackend resolver
+  protocol is *scalar* (the engine vmaps it over wave reads, validation rows,
+  and the snapshot), so the kernel is wired in through
+  :func:`jax.custom_batching.custom_vmap`: scalar calls keep the XLA
+  bisection, while a vmapped call rewrites into ONE kernel launch over the
+  whole batch.  The engine flattens its (rows, R) validation vmap to a single
+  level (see ``engine._read_set_valid``) so the kernel always sees a flat
+  query batch.  ``impl`` selection stays trace-time static — switching it
+  never recompiles per contract mix, only per config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import custom_batching
+
+from repro.core.mv.sharded import segment_searchsorted
+from repro.kernels.mv_region_resolve import kernel
+
+
+def region_searchsorted(keys: jax.Array, lo: jax.Array, hi: jax.Array,
+                        qs: jax.Array, *, impl: str = "xla",
+                        block_q: int = 256,
+                        interpret: bool | None = None) -> jax.Array:
+    """Batched ``lo[i] + searchsorted(keys[lo[i]:hi[i]], qs[i], 'left')``.
+
+    impl: 'xla' (vmapped scalar bisection, production off-TPU) | 'pallas'.
+    """
+    if impl == "pallas":
+        return kernel.segment_searchsorted_pallas(
+            keys, lo, hi, qs, block_q=block_q, interpret=interpret)
+    if impl == "xla":
+        return jax.vmap(
+            lambda l, h, q: segment_searchsorted(keys, l, h, q))(lo, hi, qs)
+    raise ValueError(f"unknown impl {impl!r}; expected 'xla' or 'pallas'")
+
+
+@custom_batching.custom_vmap
+def batchable_segment_searchsorted(keys: jax.Array, lo: jax.Array,
+                                   hi: jax.Array, q: jax.Array) -> jax.Array:
+    """Scalar segment search whose vmap IS the Pallas kernel (see above)."""
+    return segment_searchsorted(keys, lo, hi, q)
+
+
+@batchable_segment_searchsorted.def_vmap
+def _batch_rule(axis_size, in_batched, keys, lo, hi, qs):
+    keys_b, lo_b, hi_b, qs_b = in_batched
+    if keys_b:
+        # Index itself batched (not an engine path): fall back to bisection.
+        out = jax.vmap(segment_searchsorted,
+                       in_axes=(0, 0 if lo_b else None, 0 if hi_b else None,
+                                0 if qs_b else None))(keys, lo, hi, qs)
+        return out, True
+    lo = lo if lo_b else jnp.broadcast_to(lo, (axis_size,))
+    hi = hi if hi_b else jnp.broadcast_to(hi, (axis_size,))
+    qs = qs if qs_b else jnp.broadcast_to(qs, (axis_size,))
+    return kernel.segment_searchsorted_pallas(keys, lo, hi, qs), True

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the region-resolve kernel (tests only: slices each
+query's segment via dynamic masking, which the production paths avoid)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_KEY_MAX = jnp.iinfo(jnp.int32).max
+
+
+def segment_searchsorted_ref(keys: jax.Array, lo: jax.Array, hi: jax.Array,
+                             qs: jax.Array) -> jax.Array:
+    """``lo[i] + searchsorted(keys[lo[i]:hi[i]], qs[i], 'left')`` per query."""
+    def one(l, h, q):
+        cols = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        in_seg = (cols >= l) & (cols < h)
+        return l + jnp.sum(in_seg & (keys < q), dtype=jnp.int32)
+
+    return jax.vmap(one)(lo, hi, qs)

@@ -54,8 +54,16 @@ def _mv_resolve_kernel(marks_ref, out_ref, running_ref, *, block_n: int):
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_l", "interpret"))
 def mv_resolve_inclusive(marks: jax.Array, *, block_n: int = 256,
-                         block_l: int = 512, interpret: bool = True) -> jax.Array:
-    """Inclusive running max of ``marks`` along axis 0 (txns), tiled on TPU."""
+                         block_l: int = 512,
+                         interpret: bool | None = None) -> jax.Array:
+    """Inclusive running max of ``marks`` along axis 0 (txns), tiled on TPU.
+
+    ``interpret=None`` auto-selects: compiled kernel on a TPU backend,
+    interpreter elsewhere (the old unconditional ``interpret=True`` default
+    silently ran the interpreter ON TPU as well).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, l = marks.shape
     block_n = min(block_n, max(n, 1))
     block_l = min(block_l, max(l, 1))

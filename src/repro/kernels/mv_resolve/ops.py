@@ -1,9 +1,11 @@
 """Jitted public wrapper for the mv_resolve kernel.
 
-On TPU the Pallas kernel runs compiled (interpret=False); on CPU (this
-container) it runs in interpret mode, which executes the same kernel body and
-BlockSpec pipeline semantics in pure JAX — bit-identical results, validated
-against ``ref.py`` in tests/test_kernels.py.
+``impl`` switch (the ``flash_attention/ops.py`` convention):
+* ``'pallas'`` — the Pallas kernel; compiled on TPU, interpret-mode elsewhere
+  (``interpret=None`` auto-detects the backend; same kernel body and
+  BlockSpec pipeline semantics either way, validated against ``ref.py`` in
+  tests/test_kernels.py).
+* ``'xla'``    — the pure-jnp reference (``lax.cummax``).
 """
 import jax
 import jax.numpy as jnp
@@ -11,16 +13,15 @@ import jax.numpy as jnp
 from repro.kernels.mv_resolve import kernel, ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def exclusive_cummax(marks: jax.Array, *, block_n: int = 256,
-                     block_l: int = 512, force_ref: bool = False) -> jax.Array:
+def exclusive_cummax(marks: jax.Array, *, impl: str = "pallas",
+                     block_n: int = 256, block_l: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
     """(n+1, L) exclusive last-writer table from (n, L) write marks."""
-    if force_ref:
+    if impl == "xla":
         return ref.exclusive_cummax_ref(marks)
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}; expected 'pallas' or 'xla'")
     inc = kernel.mv_resolve_inclusive(marks, block_n=block_n, block_l=block_l,
-                                      interpret=not _on_tpu())
+                                      interpret=interpret)
     zero = jnp.full((1, marks.shape[1]), -1, dtype=marks.dtype)
     return jnp.concatenate([zero, inc], axis=0)

@@ -95,11 +95,17 @@ def test_sharded_build_partitions_all_live_slots():
     backend = mv.make_backend(cfg)
     write_locs = jnp.asarray([[0, 19], [5, -1], [5, 12], [-1, -1]], jnp.int32)
     index = backend.build(write_locs)
-    assert index.keys.shape == (4, 8)
-    # every row sorted ascending with +inf padding
-    keys = np.asarray(index.keys)
-    assert (np.diff(keys, axis=1) >= 0).all()
-    assert (keys != np.iinfo(np.int32).max).sum() == 5   # live slots only
+    assert index.keys.shape == (8,)                      # CSR-flat: n*W
+    keys, starts = np.asarray(index.keys), np.asarray(index.starts)
+    assert starts[0] == 0 and starts[-1] == 5            # live slots only
+    assert (keys[starts[-1]:] == np.iinfo(np.int32).max).all()  # dead tail
+    assert (np.asarray(index.packed)[starts[-1]:] == 0).all()   # normalized
+    # every region segment sorted ascending
+    for s in range(backend.n_shards):
+        seg = keys[starts[s]:starts[s + 1]]
+        assert (np.diff(seg) >= 0).all()
+    # shard_size 5: loc 0 -> s0; 5, 5 -> s1; 12 -> s2; 19 -> s3
+    np.testing.assert_array_equal(starts, [0, 1, 3, 4, 5])
     resolver = backend.make_resolver(index, write_locs,
                                      jnp.zeros((4,), jnp.bool_),
                                      jnp.zeros((4,), jnp.int32))
