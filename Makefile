@@ -1,8 +1,8 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
-.PHONY: test test-fast bench-smoke bench bench-baselines bench-shards \
-	bench-hotpath
+.PHONY: test test-fast test-dist bench-smoke bench bench-baselines \
+	bench-shards bench-hotpath bench-dist
 
 test:
 	$(PY) -m pytest -x -q
@@ -11,6 +11,14 @@ test:
 # deterministic examples each (see tests/_hypo.py).
 test-fast:
 	REPRO_FAST_EXAMPLES=2 $(PY) -m pytest -x -q
+
+# Multi-device suite directly on an 8-virtual-device CPU mesh (the flag must
+# reach XLA before jax initializes; plain `make test` covers the same suite
+# through tests/test_dist.py's subprocess runner instead).
+test-dist:
+	REPRO_FAST_EXAMPLES=2 JAX_PLATFORMS=cpu \
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q tests/test_dist.py
 
 # Fast perf record: mixed-contract bytecode block through one jitted executor.
 bench-smoke:
@@ -31,6 +39,12 @@ bench-shards:
 # -> BENCH_hotpath.json (uploaded as a CI artifact).
 bench-hotpath:
 	PYTHONPATH=src $(PY) -m benchmarks.hotpath_bench --fast
+
+# Multi-device per-wave phase timings over devices {1,2,8} x zipf x n_locs
+# at fixed regions-per-device -> BENCH_dist.json (uploaded as a CI
+# artifact).  Forces its own 8-device host platform before importing jax.
+bench-dist:
+	PYTHONPATH=src $(PY) -m benchmarks.dist_bench --fast
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast

@@ -1,0 +1,180 @@
+"""Multi-device engine benchmark: per-wave phase timings across mesh sizes.
+
+Env-var contract: ``--xla_force_host_platform_device_count`` must reach XLA
+BEFORE jax initializes its backend, so this module appends it to
+``XLA_FLAGS`` at import line one (the ``launch/dryrun.py`` convention;
+``engine_bench --devices N`` documents the same contract).  Everything here
+runs on virtual CPU devices — the comparable quantities are the *shapes*:
+with regions-per-device held fixed, the shard-local ``update`` phase does
+identical per-device work no matter how many devices (and therefore how many
+TOTAL regions) the mesh has, which is the scaling contract that matters on
+real hardware.
+
+Grid: devices {1, 2, 8} x zipf_s {0, 1.1} x n_locs {1e5, 1e7}, with
+``n_shards = REGIONS_PER_DEVICE * devices`` so per-device region count stays
+constant.  Each cell replays the engine's own shard_mapped phase functions
+(:func:`repro.core.dist.engine.make_phase_fns`) wave by wave — execute /
+index(update) / validate timed per wave, the final snapshot once — and
+records end-to-end jitted tps for the dist engine AND the single-device
+``sharded`` engine on the identical block (the exactness cross-check asserts
+byte-identical snapshots while it is at it).
+
+Output: ``BENCH_dist.json`` at the repo root (uploaded as a CI artifact by
+the ``test-dist`` job).
+
+  PYTHONPATH=src python -m benchmarks.dist_bench --fast
+"""
+from __future__ import annotations
+
+import os
+
+_COUNT = int(os.environ.get("REPRO_DIST_BENCH_DEVICES", "8"))
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_COUNT}").strip()
+
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402  (must come after XLA_FLAGS is set)
+import numpy as np  # noqa: E402
+
+from repro.core import workloads as W          # noqa: E402
+from repro.core.dist.engine import make_phase_fns  # noqa: E402
+from repro.core.engine import make_executor    # noqa: E402
+from repro.launch.mesh import make_mesh        # noqa: E402
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: Fixed per-device region count: total regions scale with the mesh, local
+#: update work does not — the claim BENCH_dist.json exists to record.
+REGIONS_PER_DEVICE = 4
+
+
+def _timed_call(fn, *args, inner=1):
+    best = float("inf")
+    for _ in range(inner):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def phase_timings(vm, params, storage, cfg, reps=1):
+    """Per-wave phase wall-clock of the dist engine (hotpath_bench style)."""
+    ph = make_phase_fns(vm, params, storage, cfg)
+    state = ph["init"]()                       # warm/compile every phase
+    state, delta = ph["execute"](state)
+    state = ph["index"](state, delta)
+    jax.block_until_ready(ph["validate"](state))
+    jax.block_until_ready(ph["snapshot"](state))
+
+    out = {k: [] for k in ("execute", "index", "validate")}
+    waves = 0
+    for _ in range(reps):
+        state = ph["init"]()
+        waves = 0
+        while bool(state.frontier < cfg.n_txns) and waves < cfg.waves_cap():
+            (state, delta), t = _timed_call(ph["execute"], state)
+            out["execute"].append(t)
+            state, t = _timed_call(ph["index"], state, delta, inner=3)
+            out["index"].append(t)
+            state, t = _timed_call(ph["validate"], state)
+            out["validate"].append(t)
+            waves += 1
+        assert bool(state.frontier >= cfg.n_txns), "block did not commit"
+    snap, snap_t = _timed_call(ph["snapshot"], state, inner=2)
+    ms = {k: float(np.median(v) * 1e3) for k, v in out.items()}
+    ms["snapshot"] = snap_t * 1e3
+    return ms, waves, np.asarray(snap)
+
+
+def _end_to_end(vm, params, storage, cfg, reps=2):
+    run = make_executor(vm, cfg)
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    assert bool(res.committed)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return np.asarray(res.snapshot), cfg.n_txns / float(np.median(times))
+
+
+def run_grid(n_txns=512, reps=1):
+    # honor a smaller forced host platform (REPRO_DIST_BENCH_DEVICES < 8)
+    devices_axis = tuple(d for d in (1, 2, 8) if d <= len(jax.devices()))
+    n_locs_axis = (10**5, 10**7)
+    zipf_axis = (0.0, 1.1)
+    record = {"suite": "dist", "n_txns": n_txns,
+              "regions_per_device": REGIONS_PER_DEVICE,
+              "host_devices": len(jax.devices()), "grid": {},
+              "note": ("virtual CPU devices serialize on one host: per-wave "
+                       "wall-clock grows with the device count's dispatch "
+                       "overhead, while per-DEVICE update work is constant "
+                       "— flat across n_locs and total region count at "
+                       "fixed regions-per-device within each device count")}
+    for d in devices_axis:
+        mesh = make_mesh("regions", (d,))
+        for n_locs in n_locs_axis:
+            n_shards = REGIONS_PER_DEVICE * d
+            for zipf_s in zipf_axis:
+                name = f"D{d}_L{n_locs}_z{zipf_s}"
+                vm, params, storage, cfg = W.make_mixed_block(
+                    W.MixedSpec(), n_txns, seed=7, n_locs=n_locs,
+                    zipf_s=zipf_s, backend="sharded", n_shards=n_shards)
+                dcfg = dataclasses.replace(cfg, dist=True, mesh=mesh)
+                ms, waves, snap = phase_timings(vm, params, storage, dcfg,
+                                                reps=reps)
+                dist_snap, dist_tps = _end_to_end(vm, params, storage, dcfg)
+                ref_snap, ref_tps = _end_to_end(vm, params, storage, cfg)
+                # the bench must be measuring the exact engine, every cell
+                np.testing.assert_array_equal(dist_snap, ref_snap)
+                np.testing.assert_array_equal(snap, ref_snap)
+                record["grid"][name] = dict(
+                    devices=d, n_shards=n_shards, waves=waves,
+                    per_wave_ms=ms, tps_dist=dist_tps,
+                    tps_single_device=ref_tps)
+                print(f"{name}: update {ms['index']:.3f}ms/wave "
+                      f"(S={n_shards}), exec {ms['execute']:.3f}ms, "
+                      f"val {ms['validate']:.3f}ms, snap {ms['snapshot']:.1f}"
+                      f"ms  e2e {dist_tps:.0f} tps (1-dev {ref_tps:.0f})")
+    # headline: shard-local update cost vs device count at fixed rpd
+    for n_locs in n_locs_axis:
+        for zipf_s in zipf_axis:
+            by_d = {d: record["grid"][f"D{d}_L{n_locs}_z{zipf_s}"]
+                    ["per_wave_ms"]["index"] for d in devices_axis}
+            key = f"update_ms_by_devices_L{n_locs}_z{zipf_s}"
+            record[key] = by_d
+            record[key + "_max_over_min"] = max(by_d.values()) / \
+                max(min(by_d.values()), 1e-9)
+    return record
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false",
+                    help="more replay reps per cell (tighter medians)")
+    ap.add_argument("--n-txns", type=int, default=512)
+    ap.add_argument("--reps", type=int, default=0,
+                    help="0 = auto: 1 rep under --fast, 3 under --full")
+    args = ap.parse_args()
+    reps = args.reps or (1 if args.fast else 3)
+    record = run_grid(n_txns=args.n_txns, reps=reps)
+    path = os.path.join(_REPO_ROOT, "BENCH_dist.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

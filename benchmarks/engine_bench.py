@@ -29,10 +29,33 @@ from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
-import jax
-import numpy as np
+# --devices N env-var contract: XLA fixes the host platform's device count
+# when the backend initializes, i.e. at first jax use — so the forced count
+# must be in XLA_FLAGS BEFORE `import jax` below.  This is the same contract
+# launch/dryrun.py satisfies by setting XLA_FLAGS at module line one; here
+# the flag value comes from argv, so it is peeked pre-import (argparse runs
+# far too late).  An already-forced count in the environment wins.
+for _i, _a in enumerate(sys.argv):
+    if _a == "--devices" and _i + 1 < len(sys.argv):
+        _v = sys.argv[_i + 1]
+    elif _a.startswith("--devices="):
+        _v = _a.split("=", 1)[1]
+    else:
+        continue
+    if not _v.isdigit():
+        break       # malformed: fall through and let argparse report it
+    if int(_v) > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_v}").strip()
+    break
+
+import jax  # noqa: E402  (after the forced-device-count env handling)
+import numpy as np  # noqa: E402
 
 from repro.core import workloads as W
 from repro.core.engine import make_executor
@@ -50,8 +73,25 @@ APTOS = dict(cfg_reads=W.CHAIN_CFG_READS_APTOS)    # 8 reads / 5 writes
 BASELINES_FAST_N, BASELINES_FULL_N = 192, 512
 
 
+# --devices N (0 = off): run the Block-STM engine cells multi-device — the
+# sharded backend's regions placed across an N-device 'regions' mesh
+# (repro.core.dist).  Set from the CLI in main().
+_DEVICES = 0
+
+
+def _dist_cfg_kw():
+    """EngineConfig extras for the --devices mesh (empty when off)."""
+    if _DEVICES <= 0:
+        return {}
+    from repro.launch.mesh import make_mesh
+    return dict(dist=True, mesh=make_mesh("regions", (_DEVICES,)))
+
+
 def _run_engine(spec, n_txns, window, seed=0, reps=3, backend="sorted",
                 validation_window=0, **cfg_kw):
+    if _DEVICES > 0:
+        backend = "sharded"              # the only backend with regions
+        cfg_kw = {**cfg_kw, **_dist_cfg_kw()}
     cfg = W.p2p_engine_config(spec, n_txns, window=window, backend=backend,
                               validation_window=validation_window, **cfg_kw)
     run = make_executor(W.p2p_program(spec), cfg)
@@ -155,8 +195,10 @@ def bench_contention(rows, profile_name, profile, n_txns=1000):
         # beyond-paper optimized variant (§Perf): windowed validation,
         # dense MV backend when the location universe is tiny (<=64 locs;
         # measured crossover — at L~200 the per-wave dense table rebuild
-        # costs more than the sort it replaces)
-        backend = "dense" if spec.n_locs <= 64 else "sorted"
+        # costs more than the sort it replaces).  Under --devices every
+        # cell runs sharded+dist; keep the reported label honest.
+        backend = "sharded" if _DEVICES > 0 else \
+            ("dense" if spec.n_locs <= 64 else "sorted")
         o = _run_engine(spec, n_txns, window=32, validation_window=128,
                         backend=backend)
         rows.append((f"fig4_{profile_name}_acc{accounts}_opt",
@@ -183,6 +225,13 @@ def bench_blocksize(rows, profile_name, profile, accounts=1000):
 
 
 def bench_backends(rows, n_txns=512, accounts=200):
+    if _DEVICES > 0:
+        # --devices forces every engine cell onto the sharded dist config;
+        # a sorted-vs-dense comparison would be two identical measurements
+        # wearing different labels.
+        rows.append(("backend_comparison_skipped", 0.0,
+                     f"--devices {_DEVICES} forces backend=sharded"))
+        return
     for backend in ("sorted", "dense"):
         spec = W.P2PSpec(n_accounts=accounts)
         r = _run_engine(spec, n_txns, window=32, backend=backend)
@@ -292,7 +341,8 @@ def bench_shards(rows, n_txns=256, reps=2, record=None):
                 try:
                     vm, params, storage, cfg = W.make_mixed_block(
                         W.MixedSpec(), n_txns, seed=7, n_locs=n_locs,
-                        zipf_s=zipf_s, backend="sharded", n_shards=n_shards)
+                        zipf_s=zipf_s, backend="sharded", n_shards=n_shards,
+                        **_dist_cfg_kw())
                 except ValueError as e:
                     # e.g. 1 shard over 1e7 locations: shard-local keys are
                     # the flat keys, and those overflow — the cell IS the
@@ -484,7 +534,18 @@ def main() -> None:
                              "shards"])
     ap.add_argument("--fast", action="store_true", default=True)
     ap.add_argument("--full", dest="fast", action="store_false")
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="run engine cells multi-device over an N-device "
+                    "'regions' mesh (forces the host platform device count "
+                    "— handled before jax import, see module docstring)")
     args = ap.parse_args()
+    global _DEVICES
+    _DEVICES = args.devices
+    if _DEVICES > len(jax.devices()):
+        raise SystemExit(
+            f"--devices {_DEVICES}: only {len(jax.devices())} devices "
+            f"visible; XLA_FLAGS was already set without a forced host "
+            f"platform device count >= {_DEVICES}")
 
     rows: list = []
     n = FAST_N if args.fast else FULL_N

@@ -120,9 +120,13 @@ def phase_timings(vm, params, storage, cfg, reps=3):
             index, t = _timed_call(index_update, state.index,
                                    state.write_locs, delta, inner=3)
             phases["update"].append(t)
-            # the bench must be measuring equivalent work, every wave
-            np.testing.assert_array_equal(np.asarray(index.keys),
-                                          np.asarray(built.keys))
+            # the bench must be measuring equivalent work, every wave —
+            # the full index (keys AND writer/slot packing AND offsets),
+            # not just the key stream
+            for field in ("keys", "packed", "starts"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(index, field)),
+                    np.asarray(getattr(built, field)), err_msg=field)
             state = record_reads(state, delta, index)
             state, t = _timed_call(validate, state)
             phases["validate"].append(t)

@@ -1,0 +1,42 @@
+"""Multi-device Block-STM: MV regions shard_mapped across a device mesh.
+
+The ``sharded`` backend's CSR-flat index is per-region independent — that
+seam becomes physical here.  A 1-D mesh ``Mesh(('regions',))`` places each
+region's index segment, its ``version`` counter, and its slice of the final
+snapshot on a fixed device; the whole wave loop then runs as ONE
+``jax.shard_map`` program (:func:`repro.core.dist.engine.run_block_dist`)
+in which
+
+* ``build``/``update`` are shard-local — each device event-merges only its
+  own regions' write events (:class:`~repro.core.dist.backend
+  .DistShardedBackend` delegates to a per-device
+  :class:`~repro.core.mv.sharded.ShardedBackend`),
+* batched read resolution (validation) is a two-hop routed query — queries
+  bucketed by ``region_of(loc)``, ``all_to_all``'d to the owning device,
+  answered with the existing segment search, routed back,
+* execution reads resolve against a per-wave ``all_gather``ed index view
+  (reads discovered mid-transaction cannot be pre-routed),
+* validation's dirty-region skip consumes the replicated version vector via
+  an ``all_gather`` of the ``(n_regions,)`` counters only, and
+* the snapshot is computed per device over its own location span and
+  gathered.
+
+Everything enters through the ordinary :class:`~repro.core.mv.base.MVBackend`
+protocol (plus its batched/placement hooks), so the engine's phase functions
+run unchanged inside the shard_map — and the execution is EXACT: byte-
+identical snapshots and identical abort/wave statistics to the single-device
+``sharded`` backend (property-tested in ``tests/test_dist.py`` on 1/2/8
+virtual devices).
+
+Importing this package never touches jax device state; meshes are built
+lazily (:func:`repro.launch.mesh.make_mesh`) at trace time.  Enable with
+``EngineConfig(dist=True, backend='sharded'[, mesh=...])`` or
+``executor.run_engine(..., mesh=...)``.
+"""
+from __future__ import annotations
+
+from repro.core.dist.backend import DistShardedBackend
+from repro.core.dist.plan import AXIS, DistPlan, plan_for, resolve_mesh
+
+__all__ = ["AXIS", "DistPlan", "DistShardedBackend", "plan_for",
+           "resolve_mesh"]

@@ -1,0 +1,287 @@
+"""DistShardedBackend: the sharded MV index, placed across a device mesh.
+
+One :class:`~repro.core.mv.base.MVBackend` whose methods run INSIDE the
+``shard_map`` over the 1-D ``'regions'`` mesh (:mod:`repro.core.dist.plan`).
+Each device holds a *local* :class:`~repro.core.mv.sharded.ShardedIndex`
+covering only its own contiguous run of regions — same CSR layout, same
+shard-local keys, per-device capacity ``n*W`` — produced by delegating to a
+per-device single-device :class:`~repro.core.mv.sharded.ShardedBackend` over
+localized write locations (``loc - device_base``; foreign locations masked to
+``NO_LOC``).  Because shard-local keys are region-relative, every local
+segment is byte-identical to the corresponding segment of the single-device
+index, which is what makes the whole dist engine exact.
+
+Communication per hook (and nothing else crosses devices):
+
+* ``build``/``update``   — none.  Each device event-merges only the write
+  events that land in its regions; the per-region ``version`` counters live
+  with their regions (local ``(regions_per_device,)`` slice).
+* ``make_resolver``      — ``all_gather`` of keys/packed/starts into a full
+  index view.  Execution reads are discovered mid-transaction (pointer
+  indirection) and cannot be pre-routed, so the wave's execute phase reads a
+  gathered snapshot of the index — the BSP analogue of remote MV reads.
+* ``resolve_batch``      — the two-hop routed query: the flat query batch is
+  chunked across devices, each device buckets its chunk by the owning device
+  (``region_of(loc) // regions_per_device``), ``all_to_all``s the buckets,
+  answers foreign queries against its own segments with the ordinary segment
+  search, ``all_to_all``s the answers back, and ``all_gather``s the chunks.
+* ``snapshot``           — no routing at all: device ``d``'s snapshot slice
+  reads exactly its own location span locally; one value ``all_gather``.
+* ``version_view``       — ``all_gather`` of the ``(regions_per_device,)``
+  counters (the cheap ``(S,)``-only collective the dirty-validation skip
+  consumes); ``bump_versions`` applies each device's own slice of the
+  engine's global dirty mask.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dist.plan import AXIS, plan_for, resolve_mesh
+from repro.core.mv.base import (BackendDefaults, ReadResolution,
+                                dirty_from_delta, finalize_resolution,
+                                resolve_value)
+from repro.core.mv.sharded import ShardedBackend, ShardedIndex, select_search
+from repro.core.types import NO_LOC
+
+
+@dataclasses.dataclass(frozen=True)
+class DistShardedBackend(BackendDefaults):
+    """Sharded MV backend with regions placed on a 1-D device mesh.
+
+    Every method must execute inside ``shard_map`` over the ``'regions'``
+    axis (:func:`repro.core.dist.engine.run_block_dist` provides it); the
+    index pytree it builds/updates is the per-device LOCAL view.
+    """
+
+    n_txns: int
+    n_locs: int
+    n_shards: int            # global region count S (single-device plan)
+    shard_size: int
+    n_devices: int           # mesh size D
+    regions_per_device: int  # ceil(S / D)
+    resolver_impl: str = "xla"
+    name: str = dataclasses.field(default="dist", init=False)
+
+    @classmethod
+    def from_config(cls, cfg) -> "DistShardedBackend":
+        plan = plan_for(cfg.n_locs, cfg.n_txns, cfg.n_shards,
+                        resolve_mesh(cfg).devices.size)
+        return cls(n_txns=cfg.n_txns, n_locs=cfg.n_locs,
+                   n_shards=plan.n_regions, shard_size=plan.shard_size,
+                   n_devices=plan.n_devices,
+                   regions_per_device=plan.regions_per_device,
+                   resolver_impl=cfg.resolver_impl)
+
+    # -- placement helpers --------------------------------------------------
+
+    @property
+    def span(self) -> int:
+        """Contiguous locations owned by one device."""
+        return self.regions_per_device * self.shard_size
+
+    @property
+    def _local(self) -> ShardedBackend:
+        """The per-device single-device backend (identical on every device:
+        ``regions_per_device`` regions of ``shard_size`` locations)."""
+        return ShardedBackend(n_txns=self.n_txns, n_locs=self.span,
+                              n_shards=self.regions_per_device,
+                              shard_size=self.shard_size,
+                              resolver_impl=self.resolver_impl)
+
+    def _base(self) -> jax.Array:
+        """This device's first owned location (traced; inside shard_map)."""
+        return jax.lax.axis_index(AXIS).astype(jnp.int32) * self.span
+
+    def _localize(self, locs: jax.Array, base: jax.Array) -> jax.Array:
+        """Global locations -> device-local ones; foreign/dead -> NO_LOC."""
+        owned = (locs != NO_LOC) & (locs >= base) & (locs < base + self.span)
+        return jnp.where(owned, locs - base, NO_LOC)
+
+    # -- MVBackend protocol -------------------------------------------------
+
+    @property
+    def n_regions(self) -> int:
+        return self.n_shards            # global: engine dirt masks are (S,)
+
+    def region_of(self, locs: jax.Array) -> jax.Array:
+        """Global location -> global region id (same map as ``sharded``)."""
+        return jnp.clip(locs // self.shard_size, 0, self.n_shards - 1)
+
+    def build(self, write_locs: jax.Array) -> ShardedIndex:
+        return self._local.build(self._localize(write_locs, self._base()))
+
+    def update(self, index: ShardedIndex, write_locs: jax.Array,
+               txn_ids: jax.Array, old_write_locs: jax.Array,
+               new_write_locs: jax.Array) -> tuple[ShardedIndex, jax.Array]:
+        """Shard-local event merge: each device folds only the wave's write
+        events that land in its regions (the same O(wave·log)+one-cumsum
+        merge as single-device, on the local capacity).  The returned dirty
+        mask is GLOBAL — it is a pure function of the replicated delta, so
+        no communication is needed to agree on it."""
+        base = self._base()
+        local, _ = self._local.update(
+            index, self._localize(write_locs, base), txn_ids,
+            self._localize(old_write_locs, base),
+            self._localize(new_write_locs, base))
+        dirty = dirty_from_delta(self.n_shards, self.region_of,
+                                 old_write_locs, new_write_locs)
+        return local, dirty
+
+    def make_resolver(self, index: ShardedIndex, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array):
+        """Scalar resolver over the ``all_gather``ed full index view.
+
+        Used by the execute phase, whose reads surface one at a time inside
+        the transaction VM's scan and therefore cannot be bucket-routed.
+        The gathered view is the per-device flat lists concatenated in
+        device order, so a global region ``s`` lives at device ``d = s //
+        regions_per_device`` with segment bounds offset by ``d * cap``;
+        segment contents (keys and packed entries) are byte-identical to the
+        single-device index, hence so is every resolution.
+        """
+        keys = jax.lax.all_gather(index.keys, AXIS).reshape(-1)
+        packed = jax.lax.all_gather(index.packed, AXIS).reshape(-1)
+        starts = jax.lax.all_gather(index.starts, AXIS)   # (D, SL+1)
+        cap = index.keys.shape[0]
+        n1 = self.n_txns + 1
+        w = write_locs.shape[1]
+        search = select_search(self.resolver_impl)
+
+        def resolver(loc, reader):
+            in_universe = (loc >= 0) & (loc < self.n_locs)
+            s = self.region_of(loc)
+            d = s // self.regions_per_device
+            ls = s - d * self.regions_per_device
+            lo = d * cap + starts[d, ls]
+            hi = d * cap + starts[d, ls + 1]
+            local = loc - s * self.shard_size
+            pos = search(keys, lo, hi, local * n1 + reader) - 1
+            safe = jnp.clip(pos, 0, keys.shape[0] - 1)
+            key = keys[safe]
+            entry = packed[safe]
+            found = (pos >= lo) & (key // n1 == local) & in_universe
+            return finalize_resolution(found, entry // w, entry % w,
+                                       estimate, incarnation)
+
+        return resolver
+
+    # -- batched/placement hooks --------------------------------------------
+
+    def _answer_local(self, index: ShardedIndex, locs: jax.Array,
+                      readers: jax.Array, estimate: jax.Array,
+                      incarnation: jax.Array, w: int) -> ReadResolution:
+        """Answer a query batch against THIS device's segments only.
+
+        Queries whose region this device does not own (or that are out of
+        universe / NO_LOC) come back ``found=False`` — the shared owner-side
+        kernel of the routed resolve and the span-local snapshot.
+        """
+        SL = self.regions_per_device
+        me = jax.lax.axis_index(AXIS).astype(jnp.int32)
+        n1 = self.n_txns + 1
+        search = select_search(self.resolver_impl)
+        s = self.region_of(locs)
+        ls = s - me * SL
+        mine = (locs >= 0) & (locs < self.n_locs) & (ls >= 0) & (ls < SL)
+        lss = jnp.clip(ls, 0, SL - 1)
+        lo = index.starts[lss]
+        hi = index.starts[lss + 1]
+        local_loc = locs - s * self.shard_size
+        q = local_loc * n1 + readers
+        pos = jax.vmap(lambda l, h, k: search(index.keys, l, h, k)
+                       )(lo, hi, q) - 1
+        safe = jnp.clip(pos, 0, index.keys.shape[0] - 1)
+        key = index.keys[safe]
+        entry = index.packed[safe]
+        found = mine & (pos >= lo) & (key // n1 == local_loc)
+        return finalize_resolution(found, entry // w, entry % w,
+                                   estimate, incarnation)
+
+    def resolve_batch(self, index: ShardedIndex, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array,
+                      locs: jax.Array, readers: jax.Array) -> ReadResolution:
+        """Two-hop routed query (see module docstring).
+
+        The replicated ``(Q,)`` batch is chunked evenly across devices; each
+        device routes its chunk's queries to their owning devices and the
+        answered chunks are re-gathered, so both the search work and the
+        answer traffic split D ways.  Bucket capacity equals the chunk size
+        (a device can send at most its whole chunk to one owner), so routing
+        never overflows and needs no fallback path.
+        """
+        D, SL = self.n_devices, self.regions_per_device
+        i32 = jnp.int32
+        w = write_locs.shape[1]
+        Q = locs.shape[0]
+        qc = -(-Q // D)                   # chunk (and bucket) capacity
+        pad = qc * D - Q
+        if pad:
+            locs = jnp.concatenate([locs, jnp.full((pad,), NO_LOC, i32)])
+            readers = jnp.concatenate([readers, jnp.zeros((pad,), i32)])
+        me = jax.lax.axis_index(AXIS)
+        my_locs = jax.lax.dynamic_slice_in_dim(locs, me * qc, qc)
+        my_rdrs = jax.lax.dynamic_slice_in_dim(readers, me * qc, qc)
+
+        # Bucket by owning device; rank within bucket = stable order of the
+        # chunk (sort-based cumcount, same group trick as sharded.update).
+        owner = self.region_of(my_locs) // SL
+        order = jnp.argsort(owner, stable=True)
+        so = owner[order]
+        iw = jnp.arange(qc, dtype=i32)
+        grp_new = (iw == 0) | (so != jnp.roll(so, 1))
+        srank = iw - jax.lax.cummax(jnp.where(grp_new, iw, 0))
+        rank = jnp.zeros((qc,), i32).at[order].set(srank)
+        slot = owner.astype(i32) * qc + rank          # unique in [0, D*qc)
+
+        send_locs = jnp.full((D * qc,), NO_LOC, i32).at[slot].set(my_locs)
+        send_rdrs = jnp.zeros((D * qc,), i32).at[slot].set(my_rdrs)
+        a2a = lambda a: jax.lax.all_to_all(a.reshape(D, qc), AXIS, 0, 0)
+        recv_locs = a2a(send_locs).reshape(-1)
+        recv_rdrs = a2a(send_rdrs).reshape(-1)
+
+        res = self._answer_local(index, recv_locs, recv_rdrs, estimate,
+                                 incarnation, w)
+        # Route answers back and unpermute: my query i's answer sits at
+        # back[owner[i]*qc + rank[i]]; then re-gather the chunks.
+        back = jax.tree_util.tree_map(lambda a: a2a(a).reshape(-1)[slot], res)
+        full = jax.tree_util.tree_map(
+            lambda a: jax.lax.all_gather(a, AXIS).reshape(-1)[:Q], back)
+        return full
+
+    def snapshot(self, index: ShardedIndex, write_locs: jax.Array,
+                 estimate: jax.Array, incarnation: jax.Array,
+                 write_vals: jax.Array, storage: jax.Array,
+                 n_locs: int) -> jax.Array:
+        """Span-local snapshot + one value gather (no query routing: device
+        ``d``'s slice of the snapshot reads exactly the locations it owns).
+        Tail-device phantom locations resolve to garbage and are sliced off
+        by the final ``[:n_locs]``."""
+        locs = self._base() + jnp.arange(self.span, dtype=jnp.int32)
+        readers = jnp.full((self.span,), self.n_txns, jnp.int32)
+        res = self._answer_local(index, locs, readers, estimate, incarnation,
+                                 write_vals.shape[1])
+        vals = resolve_value(write_vals, storage, res, locs)
+        return jax.lax.all_gather(vals, AXIS).reshape(-1)[:n_locs]
+
+    def version_view(self, index: ShardedIndex) -> jax.Array:
+        """Replicate the per-region version counters: one ``(S,)``-sized
+        ``all_gather`` — the only state validation needs from other devices
+        to decide the dirty-region skip."""
+        g = jax.lax.all_gather(index.version, AXIS).reshape(-1)
+        return g[:self.n_shards]
+
+    def bump_versions(self, index: ShardedIndex,
+                      dirty: jax.Array) -> ShardedIndex:
+        """Apply this device's slice of a global dirty mask to its local
+        counters (engine-side bumps for validation-abort estimate flips)."""
+        SL = self.regions_per_device
+        pad = self.n_devices * SL - self.n_shards
+        d = dirty.astype(jnp.int32)
+        if pad:
+            d = jnp.concatenate([d, jnp.zeros((pad,), jnp.int32)])
+        me = jax.lax.axis_index(AXIS)
+        mine = jax.lax.dynamic_slice_in_dim(d, me * SL, SL)
+        return index._replace(version=index.version + mine)

@@ -1,0 +1,98 @@
+"""The wave engine under ``jax.shard_map``: one SPMD program per block.
+
+:func:`run_block_dist` wraps the UNCHANGED single-device engine loop
+(:func:`repro.core.engine._run_block_impl`) in one ``shard_map`` over the
+1-D ``'regions'`` mesh.  Inside, ``mv.make_backend(cfg)`` resolves to the
+:class:`~repro.core.dist.backend.DistShardedBackend`, so the per-device
+program carries the scheduler state REPLICATED (it is pure int32 arithmetic
+on identical inputs — bit-deterministic, so replication holds by
+construction; ``check_rep`` is off because the engine's collectives live
+inside ``lax.while_loop``/``lax.cond``, beyond the static replication
+checker) and the MV index LOCAL, with the backend's hooks supplying exactly
+the collectives each phase needs:
+
+=================  =====================================================
+phase              communication
+=================  =====================================================
+execute            ``all_gather`` index view (+ ``(S,)`` version counters)
+index (update)     none — shard-local event merge
+validate           two-hop routed ``all_to_all`` resolve + ``(S,)`` versions
+snapshot           span-local reads + one value ``all_gather``
+=================  =====================================================
+
+:func:`make_phase_fns` exposes the same phases as separately-jitted
+shard_mapped callables for the per-wave phase benchmark
+(``benchmarks/dist_bench.py``), with the state crossing the shard_map
+boundary under :meth:`repro.core.types.EngineState.dist_spec` — the index
+travels as device-concatenated global arrays (``PartitionSpec('regions')``),
+everything else replicated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.dist.plan import resolve_mesh
+from repro.core.types import BlockResult, EngineConfig, EngineState
+
+
+def _sm(mesh, fn, in_specs, out_specs):
+    """shard_map with replication checking off (see module docstring)."""
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def run_block_dist(program, params: Any, storage: jax.Array,
+                   cfg: EngineConfig) -> BlockResult:
+    """Execute one block with MV regions placed across the config's mesh.
+
+    Jit-compatible; exact: byte-identical snapshot and identical statistics
+    to ``run_block`` with the single-device ``sharded`` backend (property-
+    tested in ``tests/test_dist.py``).  All inputs are replicated (storage is
+    read-only during a block — its per-region placement is realized by the
+    snapshot/update phases only ever touching the owning device's span) and
+    the :class:`BlockResult` comes back replicated, so chains
+    (``run_chain``) scan over it unchanged.
+    """
+    from repro.core import engine as E
+    mesh = resolve_mesh(cfg)
+
+    inner = _sm(mesh,
+                lambda p, s: E._run_block_impl(program, p, s, cfg),
+                in_specs=(P(), P()), out_specs=P())
+    return inner(params, storage)
+
+
+def make_phase_fns(program, params: Any, storage: jax.Array,
+                   cfg: EngineConfig) -> dict[str, Callable]:
+    """The engine's phase functions as separately-jitted shard_map programs.
+
+    Benchmark-only (``benchmarks/dist_bench.py`` replays the wave loop in
+    Python to time each phase per wave, mirroring ``hotpath_bench``); the
+    production path is the single-shard_map :func:`run_block_dist`.  The
+    returned callables close over ``params``/``storage`` (replicated
+    captures) and exchange :class:`EngineState` via :data:`STATE_SPEC`.
+    """
+    from repro.core import engine as E
+    mesh = resolve_mesh(cfg)
+    jit = jax.jit
+    ss = EngineState.dist_spec()
+
+    init = jit(_sm(mesh, lambda _: E._init_state(cfg),
+                   in_specs=(P(),), out_specs=ss))
+    execute = jit(_sm(
+        mesh, lambda s: E._execute_phase(s, program, params, storage, cfg),
+        in_specs=(ss,), out_specs=(ss, P())))
+    index_phase = jit(_sm(mesh, lambda s, d: E._index_phase(s, d, cfg),
+                          in_specs=(ss, P()), out_specs=ss))
+    validate = jit(_sm(
+        mesh, lambda s: E._validate_all(s, cfg)._replace(wave=s.wave + 1),
+        in_specs=(ss,), out_specs=ss))
+    snapshot = jit(_sm(mesh, lambda s: E._snapshot(s, storage, cfg),
+                       in_specs=(ss,), out_specs=P()))
+    return dict(init=functools.partial(init, storage), execute=execute,
+                index=index_phase, validate=validate, snapshot=snapshot)

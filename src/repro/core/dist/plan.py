@@ -1,0 +1,63 @@
+"""Static placement plan: which device owns which MV regions.
+
+The global region partition is exactly the single-device ``shard_plan`` (so
+the dist engine is region-structure-identical to the ``sharded`` backend it
+must match byte-for-byte); devices then take *contiguous runs* of
+``regions_per_device = ceil(n_regions / n_devices)`` regions each.  Region
+counts that do not divide the device count leave the tail device with
+phantom (always-empty) regions — padding, never a correctness case, because
+no location maps into them.
+
+Everything in this module is static trace-time Python; meshes are built
+lazily so importing :mod:`repro.core.dist` never touches jax device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.mv.sharded import shard_plan
+
+#: The one mesh axis name of the dist subsystem (1-D mesh over regions).
+AXIS = "regions"
+
+
+@dataclasses.dataclass(frozen=True)
+class DistPlan:
+    """Static region→device placement (pure trace-time Python)."""
+
+    n_devices: int           # mesh size D
+    n_regions: int           # global region count S (== shard_plan's)
+    regions_per_device: int  # ceil(S / D); tail regions are phantom padding
+    shard_size: int          # locations per region (== shard_plan's)
+
+    @property
+    def span(self) -> int:
+        """Contiguous locations owned by one device."""
+        return self.regions_per_device * self.shard_size
+
+
+def plan_for(n_locs: int, n_txns: int, n_shards: int,
+             n_devices: int) -> DistPlan:
+    """Resolve the placement for a config's universe on ``n_devices``."""
+    if n_devices < 1:
+        raise ValueError(f"need n_devices >= 1, got {n_devices}")
+    n_regions, shard_size = shard_plan(n_locs, n_txns, n_shards)
+    return DistPlan(n_devices=n_devices, n_regions=n_regions,
+                    regions_per_device=-(-n_regions // n_devices),
+                    shard_size=shard_size)
+
+
+def resolve_mesh(cfg) -> jax.sharding.Mesh:
+    """The config's 1-D region mesh (lazily built over all devices if unset).
+
+    Static per process for a given config: ``EngineConfig.mesh`` when given
+    (validated at construction to be 1-D over ``('regions',)``), else one
+    axis over every available device — the deterministic default that makes
+    ``make_executor`` compile once per mesh.
+    """
+    if cfg.mesh is not None:
+        return cfg.mesh
+    from repro.launch.mesh import make_mesh
+    return make_mesh(AXIS)

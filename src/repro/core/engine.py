@@ -173,13 +173,16 @@ def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
                     read_writer, read_inc, readers) -> jax.Array:
     """validate_read_set (paper L62-72), vectorized over rows.
 
-    The (rows, R) read matrix is flattened to ONE vmap level so batched
-    resolver implementations (``resolver_impl='pallas'``: a custom_vmap whose
-    batch rule is the region-resolve kernel) see a single flat batch instead
-    of a nested one.
+    The (rows, R) read matrix is flattened to ONE flat batch through the
+    backend's ``resolve_batch`` hook, so batched resolver implementations —
+    ``resolver_impl='pallas'`` (a custom_vmap whose batch rule is the
+    region-resolve kernel) and the dist backend's two-hop routed query —
+    see a single flat batch instead of a nested one.
     """
-    resolver = _make_resolver(state, cfg)
-    flat = jax.vmap(resolver)(read_locs.reshape(-1), readers.reshape(-1))
+    backend = mv.make_backend(cfg)
+    flat = backend.resolve_batch(state.index, state.write_locs,
+                                 state.estimate, state.incarnation,
+                                 read_locs.reshape(-1), readers.reshape(-1))
     res = jax.tree_util.tree_map(lambda a: a.reshape(read_locs.shape), flat)
     empty = read_locs == NO_LOC
     was_storage = read_writer == STORAGE
@@ -191,7 +194,8 @@ def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
     return read_ok.all(axis=-1)
 
 
-def _validate_dirty(state: EngineState, cfg: EngineConfig) -> jax.Array:
+def _validate_dirty(state: EngineState, cfg: EngineConfig,
+                    cur: jax.Array) -> jax.Array:
     """Full-validation semantics at dirty-row cost (dirty-region skip).
 
     A row may skip validation iff, for every live read, the version of the
@@ -207,11 +211,13 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig) -> jax.Array:
     batch (same O(n) nonzero machinery as the wave selection); waves that
     dirty more rows than the cap fall back to the full O(n·R) pass via
     ``lax.cond``, so the skip is never unsound and never more than one full
-    validation.  Returns the ``(n,)`` fail mask.
+    validation.  ``cur`` is the current global region-version vector (the
+    caller's ``version_view`` — computed once per wave, since gathering it
+    is a collective under the dist backend).  Returns the ``(n,)`` fail
+    mask.
     """
     n, r = cfg.n_txns, cfg.max_reads
     backend = mv.make_backend(cfg)
-    cur = state.index.version
     regions = backend.region_of(state.read_locs)
     live = state.read_locs != NO_LOC
     stale_read = live & (state.read_region_ver != cur[regions])
@@ -263,9 +269,12 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     n, r = cfg.n_txns, cfg.max_reads
     vw = cfg.validation_window
     skip = _skip_enabled(cfg)
+    # One version gather serves the whole wave's validation (it is a
+    # collective under the dist backend — don't re-issue it per use).
+    cur = mv.make_backend(cfg).version_view(state.index) if skip else None
     if vw <= 0 or vw >= n:
         if skip:
-            fail = _validate_dirty(state, cfg)
+            fail = _validate_dirty(state, cfg, cur)
         else:
             readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                                        (n, r))
@@ -293,7 +302,6 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
 
     if skip:
         backend = mv.make_backend(cfg)
-        cur = state.index.version
         regions = backend.region_of(state.read_locs)
         # Rows that remain executed were either validated this wave or
         # provably clean — either way their reads are now known to resolve
@@ -310,8 +318,7 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
                                    flocs, flocs)
         state = state._replace(
             read_region_ver=rrv,
-            index=state.index._replace(
-                version=cur + bump.astype(jnp.int32)))
+            index=backend.bump_versions(state.index, bump))
 
     state = state._replace(
         estimate=state.estimate | fail,
@@ -334,7 +341,10 @@ class WaveDelta(NamedTuple):
     old_write_locs: jax.Array  # (window, W) pre-wave live write sets, else NO_LOC
     new_write_locs: jax.Array  # (window, W) fresh write sets, else NO_LOC
     read_locs: jax.Array       # (window, R) fresh read sets (raw lanes)
-    ver0: jax.Array            # (n_regions,) index version the wave read against
+    ver0: jax.Array            # (n_regions,) index version the wave read
+                               # against (global view; only materialized —
+                               # and only consumed — under the
+                               # dirty-validation skip)
 
 
 def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
@@ -350,7 +360,11 @@ def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
                                  state.write_locs[active_ids], NO_LOC),
         new_write_locs=jnp.where(success[:, None], res.write_locs, NO_LOC),
         read_locs=res.read_locs,
-        ver0=state.index.version,
+        # Only the dirty-validation skip consumes ver0, and gathering the
+        # global view is a collective under the dist backend: skip off ->
+        # carry the raw (possibly device-local) counters unread.
+        ver0=(mv.make_backend(cfg).version_view(state.index)
+              if _skip_enabled(cfg) else state.index.version),
     )
     return _apply_results(state, active_ids, active_mask, res, cfg), delta
 
@@ -389,14 +403,32 @@ def _wave_step(state: EngineState, program: TxnProgram, params: Any,
 
 def _snapshot(state: EngineState, storage: jax.Array,
               cfg: EngineConfig) -> jax.Array:
-    """MVMemory.snapshot over the engine's backend-selected resolver."""
-    return executor.read_snapshot(_make_resolver(state, cfg),
-                                  state.write_vals, storage, cfg)
+    """MVMemory.snapshot through the backend's batched ``snapshot`` hook
+    (single-device: vmapped resolver; dist: span-local reads + gather)."""
+    return mv.make_backend(cfg).snapshot(
+        state.index, state.write_locs, state.estimate, state.incarnation,
+        state.write_vals, storage, cfg.n_locs)
 
 
 def run_block(program: TxnProgram, params: Any, storage: jax.Array,
               cfg: EngineConfig) -> BlockResult:
-    """Execute one block under Block-STM semantics. Jit-compatible."""
+    """Execute one block under Block-STM semantics. Jit-compatible.
+
+    ``cfg.dist`` routes to the multi-device engine — the SAME loop
+    (:func:`_run_block_impl`) wrapped in one ``jax.shard_map`` over the
+    config's region mesh (:mod:`repro.core.dist`), with the backend's
+    protocol hooks supplying the collectives.
+    """
+    if cfg.dist:
+        from repro.core.dist.engine import run_block_dist
+        return run_block_dist(program, params, storage, cfg)
+    return _run_block_impl(program, params, storage, cfg)
+
+
+def _run_block_impl(program: TxnProgram, params: Any, storage: jax.Array,
+                    cfg: EngineConfig) -> BlockResult:
+    """The engine loop proper (single-device body; also the per-device
+    program of the dist engine — see :func:`run_block`)."""
     state = _init_state(cfg)
     cap = jnp.asarray(cfg.waves_cap(), jnp.int32)
 

@@ -27,6 +27,7 @@ the same multi-version resolution.  This module is that shared layer:
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -70,7 +71,10 @@ def committed_resolver(write_locs: jax.Array, live: jax.Array,
     This is MVMemory restricted to final values — no ESTIMATEs, so reads
     never block.  Baseline rounds and snapshots both read through it, via
     whatever MV backend ``cfg.backend`` selects (the baselines honor the
-    backend exactly like the wave engine does).
+    backend exactly like the wave engine does).  Under ``cfg.dist`` the
+    backend builds each device's local region index and resolves through the
+    gathered view — distribution rides the protocol, but the call must then
+    execute inside the region mesh's shard_map (the dist engine's context).
     """
     backend = mv.make_backend(cfg)
     masked = jnp.where(live[:, None], write_locs, NO_LOC)
@@ -93,14 +97,37 @@ def read_snapshot(resolver, write_vals: jax.Array, storage: jax.Array,
 
 def run_engine(name: str, program: TxnProgram, params: Any,
                storage: jax.Array, cfg: EngineConfig, *,
-               perfect_write_locs: jax.Array | None = None):
+               perfect_write_locs: jax.Array | None = None,
+               mesh: Any = None):
     """Run one block under the named engine.
 
     Returns ``(snapshot, committed, stats)`` where ``stats`` is a small dict
     of engine-specific counters.  For ``bohm``, the oracle write-set pre-pass
     runs automatically unless ``perfect_write_locs`` is supplied (the paper
     grants Bohm the sets 'artificially'; so do we).
+
+    ``mesh`` (a 1-D ``('regions',)`` mesh, see ``launch.mesh.make_mesh``)
+    runs Block-STM multi-device: MV regions are placed across the mesh and
+    the block executes under ``jax.shard_map`` (:mod:`repro.core.dist`),
+    with the committed snapshot gathered back replicated.  The comparison
+    baselines are single-device by construction (their loops are Python-
+    level rounds), so ``mesh`` is rejected for them rather than silently
+    ignored.
     """
+    if (mesh is not None or cfg.dist) and name != "blockstm":
+        # Also catches a caller-built dist config: the baselines would
+        # otherwise construct the dist backend outside any shard_map and
+        # die on an unbound 'regions' axis deep inside jax.
+        raise NotImplementedError(
+            f"mesh=/cfg.dist (multi-device execution) is a Block-STM "
+            f"engine feature; engine {name!r} runs single-device")
+    if mesh is not None:
+        if cfg.backend != "sharded":
+            raise ValueError(
+                f"mesh= places the sharded backend's regions across "
+                f"devices; cfg.backend={cfg.backend!r} would be silently "
+                f"replaced — pass a backend='sharded' config")
+        cfg = dataclasses.replace(cfg, dist=True, mesh=mesh)
     if name == "sequential":
         from repro.core.vm import run_sequential
         snap = run_sequential(program, params, storage, cfg.n_txns)

@@ -19,8 +19,8 @@ the shard-local key encoding and its overflow math, and how to add a backend.
 """
 from __future__ import annotations
 
-from repro.core.mv.base import (MVBackend, ReadResolution, Resolver,
-                                dirty_from_delta, resolve_value,
+from repro.core.mv.base import (BackendDefaults, MVBackend, ReadResolution,
+                                Resolver, dirty_from_delta, resolve_value,
                                 update_by_rebuild)
 from repro.core.mv.dense import DenseBackend, DenseIndex
 from repro.core.mv.sharded import ShardedBackend, ShardedIndex, shard_plan
@@ -42,6 +42,12 @@ def make_backend(cfg) -> MVBackend:
         return DenseBackend(n_txns=cfg.n_txns, n_locs=cfg.n_locs,
                             use_pallas=cfg.use_pallas)
     if cfg.backend == "sharded":
+        if getattr(cfg, "dist", False):
+            # Region segments placed across the config's device mesh; only
+            # reachable inside the dist engine's shard_map (lazy import —
+            # core.dist builds on this package).
+            from repro.core.dist.backend import DistShardedBackend
+            return DistShardedBackend.from_config(cfg)
         return ShardedBackend.from_universe(
             cfg.n_txns, cfg.n_locs, cfg.n_shards,
             resolver_impl=cfg.resolver_impl)
@@ -49,8 +55,8 @@ def make_backend(cfg) -> MVBackend:
                      f"expected one of {BACKENDS}")
 
 
-__all__ = ["MVBackend", "ReadResolution", "Resolver", "resolve_value",
-           "dirty_from_delta", "update_by_rebuild",
+__all__ = ["BackendDefaults", "MVBackend", "ReadResolution", "Resolver",
+           "resolve_value", "dirty_from_delta", "update_by_rebuild",
            "SortedBackend", "SortedIndex", "DenseBackend", "DenseIndex",
            "ShardedBackend", "ShardedIndex", "shard_plan", "BACKENDS",
            "make_backend"]

@@ -29,6 +29,30 @@ This module pins down that seam.  A backend is an object with three methods:
   ReadResolution``, a scalar function the engine vmaps over reads, read-set
   validation rows, and the final snapshot.
 
+Backends additionally expose four *batched/placement* hooks with protocol-
+level defaults (:class:`BackendDefaults`), which is what lets the
+multi-device backend (:mod:`repro.core.dist`) change data placement without
+the engine caring:
+
+* ``resolve_batch(index, write_locs, estimate, incarnation, locs, readers)``
+  — resolve a flat batch of reads at once.  Default: vmap of the scalar
+  resolver (which is also how the ``resolver_impl='pallas'`` kernel batches);
+  the dist backend instead routes each query to the device owning its region
+  (two-hop ``all_to_all``) and gathers the answers.
+* ``snapshot(index, write_locs, estimate, incarnation, write_vals, storage,
+  n_locs)`` — MVMemory.snapshot (paper L55-61) as one batched read of every
+  location by reader ``n_txns``.  Default: ``resolve_batch`` + value gather;
+  the dist backend resolves each device's own location span locally and
+  ``all_gather``s the value slices.
+* ``version_view(index) -> (n_regions,)`` — the global region-version vector.
+  Default: ``index.version``; the dist backend ``all_gather``s the per-device
+  counters (each region's counter lives with its region).
+* ``bump_versions(index, dirty) -> index`` — apply an engine-side version
+  bump for a global ``(n_regions,)`` dirty mask (validation-abort estimate
+  flips change no index entry, so the engine bumps those regions itself).
+  Default: add to ``index.version``; the dist backend adds each device's own
+  slice of the mask.
+
 Regions and versions
 --------------------
 Every backend partitions the location universe into ``n_regions`` contiguous
@@ -114,6 +138,56 @@ class MVBackend(Protocol):
                       estimate: jax.Array, incarnation: jax.Array) -> Resolver:
         """Close over the current MV state; return the per-read resolver."""
         ...
+
+    def resolve_batch(self, index: Any, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array,
+                      locs: jax.Array, readers: jax.Array) -> ReadResolution:
+        """Resolve a flat ``(Q,)`` batch of reads (see module docstring)."""
+        ...
+
+    def snapshot(self, index: Any, write_locs: jax.Array, estimate: jax.Array,
+                 incarnation: jax.Array, write_vals: jax.Array,
+                 storage: jax.Array, n_locs: int) -> jax.Array:
+        """MVMemory.snapshot: ``(n_locs,)`` final values over ``storage``."""
+        ...
+
+    def version_view(self, index: Any) -> jax.Array:
+        """Global ``(n_regions,)`` region-version vector for this index."""
+        ...
+
+    def bump_versions(self, index: Any, dirty: jax.Array) -> Any:
+        """Index with ``version`` bumped by a global ``(n_regions,)`` mask."""
+        ...
+
+
+class BackendDefaults:
+    """Protocol-default batched/placement hooks (single-device layouts).
+
+    Concrete backends inherit this; only the multi-device backend
+    (:class:`repro.core.dist.backend.DistShardedBackend`) overrides the lot
+    to change where regions live.
+    """
+
+    def resolve_batch(self, index, write_locs, estimate, incarnation,
+                      locs, readers) -> ReadResolution:
+        resolver = self.make_resolver(index, write_locs, estimate,
+                                      incarnation)
+        return jax.vmap(resolver)(locs, readers)
+
+    def snapshot(self, index, write_locs, estimate, incarnation, write_vals,
+                 storage, n_locs) -> jax.Array:
+        locs = jnp.arange(n_locs, dtype=jnp.int32)
+        readers = jnp.full((n_locs,), self.n_txns, jnp.int32)
+        res = self.resolve_batch(index, write_locs, estimate, incarnation,
+                                 locs, readers)
+        return resolve_value(write_vals, storage, res, locs)
+
+    def version_view(self, index) -> jax.Array:
+        return index.version
+
+    def bump_versions(self, index, dirty):
+        return index._replace(version=index.version
+                              + dirty.astype(jnp.int32))
 
 
 def dirty_from_delta(n_regions: int, region_of, old_write_locs: jax.Array,

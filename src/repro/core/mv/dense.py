@@ -14,7 +14,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import ReadResolution, update_by_rebuild
+from repro.core.mv.base import (BackendDefaults, ReadResolution,
+                                update_by_rebuild)
 from repro.core.types import NO_LOC, STORAGE
 
 
@@ -64,7 +65,7 @@ def dense_resolve(last_writer: jax.Array, write_locs: jax.Array,
 
 
 @dataclasses.dataclass(frozen=True)
-class DenseBackend:
+class DenseBackend(BackendDefaults):
     """MVBackend over the materialized last-writer table (see module docstring)."""
 
     n_txns: int

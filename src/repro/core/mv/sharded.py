@@ -46,7 +46,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import dirty_from_delta, finalize_resolution
+from repro.core.mv.base import (BackendDefaults, dirty_from_delta,
+                                finalize_resolution)
 from repro.core.types import NO_LOC
 
 _KEY_MAX = jnp.iinfo(jnp.int32).max
@@ -121,6 +122,26 @@ def segment_searchsorted(keys: jax.Array, lo: jax.Array, hi: jax.Array,
     return lo
 
 
+def select_search(resolver_impl: str):
+    """Segment-search implementation behind ``EngineConfig.resolver_impl``.
+
+    ``'pallas'`` batches the segment binary search on TPU
+    (kernels/mv_region_resolve) via ``custom_vmap``: scalar calls still run
+    :func:`segment_searchsorted`, but vmapped reads hit the Pallas kernel.
+    Lazy import: the kernel package depends on this module for its XLA
+    reference.  Shared by :class:`ShardedBackend` and the multi-device
+    backend (:mod:`repro.core.dist`), whose owner-side answering is the same
+    per-shard search.
+    """
+    if resolver_impl == "pallas":
+        from repro.kernels.mv_region_resolve import ops as rr_ops
+        return rr_ops.batchable_segment_searchsorted
+    if resolver_impl == "xla":
+        return segment_searchsorted
+    raise ValueError(f"unknown resolver_impl {resolver_impl!r}; "
+                     f"expected 'xla' or 'pallas'")
+
+
 def row_searchsorted(keys: jax.Array, row: jax.Array, q: jax.Array) -> jax.Array:
     """``searchsorted(keys[row], q, side='left')`` for a (rows, cap) matrix.
 
@@ -157,7 +178,7 @@ def _encode(write_locs: jax.Array, txn_ids: jax.Array, n_txns: int,
 
 
 @dataclasses.dataclass(frozen=True)
-class ShardedBackend:
+class ShardedBackend(BackendDefaults):
     """MVBackend over the CSR-flat region index (see module docstring)."""
 
     n_txns: int
@@ -294,20 +315,7 @@ class ShardedBackend:
                       estimate: jax.Array, incarnation: jax.Array):
         n1 = self.n_txns + 1
         w = write_locs.shape[1]
-        if self.resolver_impl == "pallas":
-            # Batches the segment binary search on TPU
-            # (kernels/mv_region_resolve) via custom_vmap: scalar calls still
-            # run segment_searchsorted, but the engine's vmapped reads hit
-            # the Pallas kernel.  Lazy import: the kernel package depends on
-            # this module for its XLA reference.
-            from repro.kernels.mv_region_resolve import ops as rr_ops
-            search = rr_ops.batchable_segment_searchsorted
-        elif self.resolver_impl == "xla":
-            search = segment_searchsorted
-        else:
-            raise ValueError(
-                f"unknown resolver_impl {self.resolver_impl!r}; "
-                f"expected 'xla' or 'pallas'")
+        search = select_search(self.resolver_impl)
 
         def resolver(loc, reader):
             in_universe = (loc >= 0) & (loc < self.n_locs)

@@ -16,8 +16,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.mv.base import (ReadResolution, finalize_resolution,
-                                update_by_rebuild)
+from repro.core.mv.base import (BackendDefaults, ReadResolution,
+                                finalize_resolution, update_by_rebuild)
 from repro.core.types import NO_LOC
 
 _KEY_MAX = jnp.iinfo(jnp.int32).max
@@ -66,7 +66,7 @@ def resolve_sorted(index: SortedIndex, n_txns: int, estimate: jax.Array,
 
 
 @dataclasses.dataclass(frozen=True)
-class SortedBackend:
+class SortedBackend(BackendDefaults):
     """MVBackend over one flat sorted key array (see module docstring)."""
 
     n_txns: int

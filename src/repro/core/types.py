@@ -58,6 +58,16 @@ class EngineConfig:
     resolver_impl: str = "xla"   # sharded backend read resolution: 'xla'
                                  # (segment_searchsorted) | 'pallas'
                                  # (kernels/mv_region_resolve; interpret off-TPU)
+    dist: bool = False           # multi-device execution (repro.core.dist):
+                                 # run the block under jax.shard_map with each
+                                 # MV region's index segment, version counter,
+                                 # and snapshot slice placed on a fixed device
+                                 # of a 1-D 'regions' mesh.  Requires
+                                 # backend='sharded' (the CSR region seam).
+    mesh: Any = None             # dist=True: explicit 1-D jax.sharding.Mesh
+                                 # with axis ('regions',); None = lazily build
+                                 # one over ALL available devices at trace
+                                 # time (launch.mesh.make_mesh)
     track_write_stability: bool = True  # paper's wrote_new_location statistic
 
     def __post_init__(self):
@@ -75,6 +85,18 @@ class EngineConfig:
                 f"resolver_impl='pallas' is the sharded backend's region-"
                 f"resolve kernel; backend={self.backend!r} does not use it "
                 f"(the dense backend's kernel switch is use_pallas)")
+        if self.dist and self.backend != "sharded":
+            raise ValueError(
+                f"dist=True shard_maps the sharded backend's per-region "
+                f"index segments across devices; backend={self.backend!r} "
+                f"has no region partition to place (use backend='sharded')")
+        if self.mesh is not None and not self.dist:
+            raise ValueError("mesh is only meaningful with dist=True")
+        if self.mesh is not None and tuple(self.mesh.axis_names) != \
+                ("regions",):
+            raise ValueError(
+                f"dist mesh must be 1-D with axis ('regions',), got axes "
+                f"{tuple(self.mesh.axis_names)} (see launch.mesh.make_mesh)")
         # Index keys are loc*(n+1)+writer in int32 (x64 is disabled).  The
         # flat backends key the whole universe; 'sharded' keys per region, so
         # only the region size is bounded (shard_plan validates it and raises
@@ -131,6 +153,23 @@ class EngineState(NamedTuple):
     stat_dep_aborts: jax.Array   # () i32 executions aborted on an ESTIMATE read
     stat_val_aborts: jax.Array   # () i32 validation failures that aborted
     stat_wrote_new: jax.Array    # () i32 incarnations that wrote a new location
+
+    @classmethod
+    def dist_spec(cls) -> "EngineState":
+        """Partitioning of the state at a ``shard_map`` boundary of the
+        multi-device engine (:mod:`repro.core.dist`): scheduler/MVMemory
+        arrays replicated (they are int32-deterministic on every device),
+        the backend-owned region index device-concatenated along its leading
+        axis (``PartitionSpec('regions')`` — ShardedIndex leaves are 1-D, so
+        this concatenates the per-device keys/packed/starts/version lists).
+        """
+        from jax.sharding import PartitionSpec as P
+        return cls(
+            write_locs=P(), write_vals=P(), estimate=P(), read_locs=P(),
+            read_writer=P(), read_inc=P(), read_region_ver=P(),
+            incarnation=P(), executed=P(), needs_exec=P(), blocked_by=P(),
+            frontier=P(), wave=P(), index=P("regions"), stat_execs=P(),
+            stat_dep_aborts=P(), stat_val_aborts=P(), stat_wrote_new=P())
 
 
 class ExecResult(NamedTuple):

@@ -1,13 +1,18 @@
-"""Production mesh construction.
+"""Mesh construction.
 
-Defined as a FUNCTION so importing this module never touches jax device
-state.  Production target: TPU v5e, 256 chips/pod, 16x16 (data, model);
-multi-pod doubles with a leading 'pod' axis (data parallelism across pods —
-the lowest-bandwidth dimension carries only gradient all-reduces).
+Every builder here is a FUNCTION so importing this module never touches jax
+device state — callers (tests, examples, ``core/dist``) construct meshes
+lazily, at call time.  Production target: TPU v5e, 256 chips/pod, 16x16
+(data, model); multi-pod doubles with a leading 'pod' axis (data parallelism
+across pods — the lowest-bandwidth dimension carries only gradient
+all-reduces).
 """
 from __future__ import annotations
 
+import math
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,8 +21,48 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_mesh(axis_names="data", shape=None) -> jax.sharding.Mesh:
+    """Generic mesh over the actually-available devices (tests/examples).
+
+    ``axis_names`` is one axis name (str) or a tuple of names; ``shape`` gives
+    the per-axis sizes, where a single ``-1`` absorbs all remaining devices
+    (the default for a 1-D mesh is ``(-1,)`` — one axis over everything).
+    The first ``prod(shape)`` devices are used, so submeshes of the same
+    process nest deterministically (``make_mesh('regions', (2,))`` is a prefix
+    of ``make_mesh('regions', (8,))``).  Raises if more devices are requested
+    than exist.
+    """
+    if isinstance(axis_names, str):
+        axis_names = (axis_names,)
+    devices = jax.devices()
+    if shape is None:
+        if len(axis_names) != 1:
+            raise ValueError(f"shape is required for a multi-axis mesh "
+                             f"(axis_names={axis_names})")
+        shape = (-1,)
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != len(axis_names):
+        raise ValueError(f"shape {shape} does not match axes {axis_names}")
+    if shape.count(-1) > 1:
+        raise ValueError(f"at most one -1 axis allowed, got {shape}")
+    if -1 in shape:
+        known = math.prod(s for s in shape if s != -1)
+        if known > len(devices) or len(devices) % known:
+            # Silently filling a prefix would run on a fraction of the
+            # hardware; a non-dividing axis is a misconfiguration (the
+            # behavior jax.make_mesh had before this helper).
+            raise ValueError(
+                f"cannot fill the -1 axis: {len(devices)} devices do not "
+                f"divide by the fixed axes {dict(zip(axis_names, shape))}")
+        shape = tuple(len(devices) // known if s == -1 else s for s in shape)
+    total = math.prod(shape)
+    if total > len(devices):
+        raise ValueError(f"mesh {dict(zip(axis_names, shape))} needs {total} "
+                         f"devices; only {len(devices)} available")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:total]).reshape(shape), axis_names)
+
+
 def make_host_mesh(model_axis: int = 1):
-    """Tiny mesh over the actually-available devices (tests/examples)."""
-    n = len(jax.devices())
-    data = max(1, n // model_axis)
-    return jax.make_mesh((data, model_axis), ("data", "model"))
+    """Tiny (data, model) mesh over the available devices (tests/examples)."""
+    return make_mesh(("data", "model"), (-1, model_axis))
