@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test test-fast test-dist bench-smoke bench bench-baselines \
-	bench-shards bench-hotpath bench-dist
+	bench-shards bench-hotpath bench-dist profile report check-regression
 
 test:
 	$(PY) -m pytest -x -q
@@ -48,3 +48,23 @@ bench-dist:
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast
+
+# Perfetto profile of a representative mixed block: jax.profiler.trace dump
+# under profiles/ with the engine's blockstm.* named scopes labelling the
+# phases (open the .trace.json.gz at https://ui.perfetto.dev).
+profile:
+	PYTHONPATH=src $(PY) -m repro.obs.profile --out profiles
+
+# Wave-table / abort-chain report over WAVE_TRACE.json.  Generate the trace
+# (plus CHROME_TRACE.json for perfetto) with:
+#   PYTHONPATH=src python -m benchmarks.engine_bench --workload mixed --trace
+report:
+	PYTHONPATH=src $(PY) -m repro.obs.report WAVE_TRACE.json
+
+# The CI perf gate, locally: fresh hotpath record vs the committed baseline
+# (fails only on order-of-magnitude regressions).
+check-regression:
+	PYTHONPATH=src $(PY) -m benchmarks.hotpath_bench --fast \
+		--out BENCH_hotpath.fresh.json
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		BENCH_hotpath.fresh.json

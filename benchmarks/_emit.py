@@ -1,0 +1,90 @@
+"""Schema-versioned benchmark record emitter shared by every suite.
+
+All ``BENCH_*.json`` perf artifacts (engine_bench's bytecode / baselines /
+shards records, hotpath_bench, dist_bench) go through
+:func:`write_bench`, which stamps each payload with:
+
+* ``schema_rev`` — bumped whenever a suite changes the meaning or layout
+  of its fields, so ``benchmarks/check_regression.py`` (and any external
+  consumer of the CI artifacts) can refuse records it does not
+  understand instead of comparing incompatible numbers;
+* ``suite`` — which generator produced it;
+* ``env`` — the jax/python versions and the device platform+count the
+  numbers were measured on (CPU wall-clock comparisons are only
+  meaningful within a platform).
+
+No wall-clock timestamp: records are committed at the repo root, and the
+measured fields are the only diff a regeneration should show.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import sys
+from typing import Any, Mapping
+
+#: Bump when any suite's record layout changes incompatibly.
+SCHEMA_REV = 2
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _env_stamp() -> dict:
+    import jax
+    devices = jax.devices()
+    return {
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "platform": devices[0].platform if devices else "unknown",
+        "device_count": len(devices),
+    }
+
+
+def bench_path(name: str, out: str | None = None) -> str:
+    """Where suite ``name``'s record lives: ``BENCH_<name>.json`` at the
+    repo root, or under/at ``out`` when given (CI writes fresh records to a
+    scratch path so the committed baseline stays comparable)."""
+    filename = f"BENCH_{name}.json"
+    if out is None:
+        return os.path.join(_REPO_ROOT, filename)
+    return os.path.join(out, filename) if os.path.isdir(out) else out
+
+
+def write_bench(name: str, payload: Mapping[str, Any],
+                out: str | None = None) -> str:
+    """Write one suite's record; returns the path written."""
+    record = dict(payload)
+    record["suite"] = name
+    record["schema_rev"] = SCHEMA_REV
+    record["env"] = _env_stamp()
+    path = bench_path(name, out)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def load_bench(path: str, expect_suite: str | None = None) -> dict:
+    """Load a record, enforcing the schema handshake."""
+    with open(path) as f:
+        record = json.load(f)
+    rev = record.get("schema_rev")
+    if rev != SCHEMA_REV:
+        raise ValueError(
+            f"{path}: schema_rev {rev!r} != emitter {SCHEMA_REV} — "
+            f"regenerate the record (make bench-{record.get('suite', '?')})")
+    if expect_suite is not None and record.get("suite") != expect_suite:
+        raise ValueError(f"{path}: suite {record.get('suite')!r}, "
+                         f"expected {expect_suite!r}")
+    return record
+
+
+def main() -> None:
+    """Print the env stamp (handy for CI debugging)."""
+    print(json.dumps({"schema_rev": SCHEMA_REV, "env": _env_stamp()},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

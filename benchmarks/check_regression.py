@@ -1,0 +1,113 @@
+"""CI perf-regression gate over the committed hotpath baseline.
+
+Compares a freshly measured ``BENCH_hotpath.json`` (written by
+``hotpath_bench --out``) against the committed repo-root baseline and
+fails (exit 1) only on ORDER-OF-MAGNITUDE regressions — CI machines are
+shared and noisy, so the default tolerance is 10x: the gate exists to
+catch "the incremental path silently fell off a perf cliff" (e.g. an
+accidental O(block) rebuild inside ``backend.update``, or the engine
+recompiling per wave), not 20% jitter.
+
+Checked per grid cell present in BOTH records:
+
+* ``tps_incremental``        — end-to-end engine throughput;
+* ``update_vs_build_x``      — the incremental-maintenance advantage
+                               (must not collapse toward the rebuild path);
+
+plus the aggregate ``median_update_vs_build_x``.  Cells present in only
+one record (grid drift) are reported but never fail the gate.  Both
+records must carry the emitter's current ``schema_rev``
+(``benchmarks/_emit.py``) — incomparable layouts refuse loudly instead
+of comparing garbage.
+
+    PYTHONPATH=src python -m benchmarks.hotpath_bench --fast --out /tmp/fresh.json
+    PYTHONPATH=src python -m benchmarks.check_regression /tmp/fresh.json
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._emit import bench_path, load_bench
+
+#: Fail only when fresh is worse than baseline by this factor.
+DEFAULT_TOLERANCE = 10.0
+
+#: Per-cell higher-is-better metrics to gate on.
+CELL_METRICS = ("tps_incremental", "update_vs_build_x")
+
+
+def compare(baseline: dict, fresh: dict,
+            tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
+                                                           list[str]]:
+    """Returns (failures, notes); empty failures == gate passes."""
+    failures: list[str] = []
+    notes: list[str] = []
+
+    def check(name: str, base_v: float, fresh_v: float) -> None:
+        ratio = fresh_v / max(base_v, 1e-12)
+        line = f"{name}: baseline {base_v:.3g} fresh {fresh_v:.3g} " \
+               f"({ratio:.2f}x)"
+        if fresh_v * tolerance < base_v:
+            failures.append(line + f"  << {tolerance:.0f}x regression")
+        else:
+            notes.append(line)
+
+    check("median_update_vs_build_x",
+          float(baseline["median_update_vs_build_x"]),
+          float(fresh["median_update_vs_build_x"]))
+    bgrid, fgrid = baseline.get("grid", {}), fresh.get("grid", {})
+    for cell in sorted(set(bgrid) | set(fgrid)):
+        if cell not in bgrid or cell not in fgrid:
+            notes.append(f"{cell}: only in "
+                         f"{'baseline' if cell in bgrid else 'fresh'} "
+                         f"(grid drift, not gated)")
+            continue
+        b, f = bgrid[cell], fgrid[cell]
+        if "error" in b or "error" in f:
+            # int32-refusal cells carry no numbers; a refusal flipping
+            # between records IS worth failing on — the config's
+            # feasibility changed.  Only comparable at equal block size
+            # (the refusal bound depends on n_txns).
+            if ("error" in b) != ("error" in f):
+                line = (f"{cell}: refusal state changed "
+                        f"(baseline error={b.get('error')!r}, "
+                        f"fresh error={f.get('error')!r})")
+                if baseline.get("n_txns") == fresh.get("n_txns"):
+                    failures.append(line)
+                else:
+                    notes.append(line + "  (different n_txns, not gated)")
+            continue
+        for metric in CELL_METRICS:
+            check(f"{cell}.{metric}", float(b[metric]), float(f[metric]))
+    return failures, notes
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly measured BENCH_hotpath.json "
+                    "(hotpath_bench --out)")
+    ap.add_argument("--baseline", default=bench_path("hotpath"),
+                    help="committed baseline (default: repo-root "
+                    "BENCH_hotpath.json)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="fail when fresh is worse by this factor "
+                    "(default: %(default)s)")
+    args = ap.parse_args(argv)
+    baseline = load_bench(args.baseline, expect_suite="hotpath")
+    fresh = load_bench(args.fresh, expect_suite="hotpath")
+    failures, notes = compare(baseline, fresh, tolerance=args.tolerance)
+    for line in notes:
+        print("  " + line)
+    if failures:
+        print(f"\nPERF REGRESSION ({len(failures)} metric(s) beyond "
+              f"{args.tolerance:.0f}x):", file=sys.stderr)
+        for line in failures:
+            print("  " + line, file=sys.stderr)
+        sys.exit(1)
+    print(f"\nperf gate OK: {len(notes)} metrics within "
+          f"{args.tolerance:.0f}x of baseline")
+
+
+if __name__ == "__main__":
+    main()

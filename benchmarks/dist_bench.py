@@ -36,18 +36,16 @@ if "xla_force_host_platform_device_count" not in \
         + f" --xla_force_host_platform_device_count={_COUNT}").strip()
 
 import dataclasses  # noqa: E402
-import json         # noqa: E402
 import time         # noqa: E402
 
 import jax          # noqa: E402  (must come after XLA_FLAGS is set)
 import numpy as np  # noqa: E402
 
+from benchmarks._emit import write_bench       # noqa: E402
 from repro.core import workloads as W          # noqa: E402
 from repro.core.dist.engine import make_phase_fns  # noqa: E402
 from repro.core.engine import make_executor    # noqa: E402
 from repro.launch.mesh import make_mesh        # noqa: E402
-
-_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 #: Fixed per-device region count: total regions scale with the mesh, local
 #: update work does not — the claim BENCH_dist.json exists to record.
@@ -112,7 +110,7 @@ def run_grid(n_txns=512, reps=1):
     devices_axis = tuple(d for d in (1, 2, 8) if d <= len(jax.devices()))
     n_locs_axis = (10**5, 10**7)
     zipf_axis = (0.0, 1.1)
-    record = {"suite": "dist", "n_txns": n_txns,
+    record = {"n_txns": n_txns,
               "regions_per_device": REGIONS_PER_DEVICE,
               "host_devices": len(jax.devices()), "grid": {},
               "note": ("virtual CPU devices serialize on one host: per-wave "
@@ -169,11 +167,7 @@ def main():
     args = ap.parse_args()
     reps = args.reps or (1 if args.fast else 3)
     record = run_grid(n_txns=args.n_txns, reps=reps)
-    path = os.path.join(_REPO_ROOT, "BENCH_dist.json")
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"wrote {path}")
+    print(f"wrote {write_bench('dist', record)}")
 
 
 if __name__ == "__main__":

@@ -27,7 +27,6 @@ perf records at the repo root (tps + recompile counts).
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -57,6 +56,7 @@ for _i, _a in enumerate(sys.argv):
 import jax  # noqa: E402  (after the forced-device-count env handling)
 import numpy as np  # noqa: E402
 
+from benchmarks._emit import write_bench
 from repro.core import workloads as W
 from repro.core.engine import make_executor
 from repro.core.vm import run_sequential
@@ -484,18 +484,35 @@ def bench_mixed(rows, n_txns=512, reps=3, record=None):
         record["recompiles_after_first"] = (cache - 1) if cache else None
 
 
-def write_record(record, suite, filename):
-    record = dict(record)
-    record["suite"] = suite
-    path = os.path.join(_REPO_ROOT, filename)
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return path
-
-
 def write_bytecode_record(record):
-    return write_record(record, "bytecode", "BENCH_bytecode.json")
+    return write_bench("bytecode", record)
+
+
+def emit_trace(n_txns, trace_level=2):
+    """--trace: run one traced mixed block and write WAVE_TRACE.json +
+    CHROME_TRACE.json at the repo root (level-2 buffers: counters + abort
+    edges).  Respects --devices (the trace then carries per-device
+    mv_entries / dirty_regions rows).  Render with ``make report``."""
+    import dataclasses
+
+    from repro.obs import export as X
+    from repro.obs import report as R
+
+    kw = dict(backend="sharded", n_shards=16, **_dist_cfg_kw()) \
+        if _DEVICES > 0 else {}
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, **kw)
+    cfg = dataclasses.replace(cfg, trace_level=trace_level)
+    res = make_executor(vm, cfg)(params, storage)
+    assert bool(res.committed)
+    meta = dict(workload="mixed", n_txns=n_txns, trace_level=trace_level,
+                backend=cfg.backend, devices=max(_DEVICES, 1))
+    d = X.write_wave_trace(os.path.join(_REPO_ROOT, "WAVE_TRACE.json"),
+                           res.trace, res.waves, meta=meta)
+    X.write_chrome_trace(os.path.join(_REPO_ROOT, "CHROME_TRACE.json"), d)
+    print(R.summary(d))
+    print("wrote WAVE_TRACE.json + CHROME_TRACE.json "
+          "(report: make report; view: https://ui.perfetto.dev)")
 
 
 # One shared block size per mode, so BENCH_bytecode.json is comparable no
@@ -522,7 +539,7 @@ def run_all(fast: bool = True):
     # the ALU A/B already ran inside bench_bytecode: reuse its numbers
     baselines_record.update({k: v for k, v in record.items()
                              if k.startswith("alu_")})
-    write_record(baselines_record, "baselines", "BENCH_baselines.json")
+    write_bench("baselines", baselines_record)
     return rows
 
 
@@ -538,6 +555,10 @@ def main() -> None:
                     help="run engine cells multi-device over an N-device "
                     "'regions' mesh (forces the host platform device count "
                     "— handled before jax import, see module docstring)")
+    ap.add_argument("--trace", action="store_true",
+                    help="additionally run one trace_level=2 mixed block "
+                    "and write WAVE_TRACE.json + CHROME_TRACE.json "
+                    "(see repro.obs)")
     args = ap.parse_args()
     global _DEVICES
     _DEVICES = args.devices
@@ -564,10 +585,13 @@ def main() -> None:
         bench_baselines(rows, n_txns=BASELINES_FAST_N if args.fast else
                         BASELINES_FULL_N, record=record)
         bench_alu(rows, n_txns=n, record=record)
-        write_record(record, "baselines", "BENCH_baselines.json")
+        write_bench("baselines", record)
     elif args.workload == "shards":
         bench_shards(rows, record=record)
-        write_record(record, "shards", "BENCH_shards.json")
+        write_bench("shards", record)
+
+    if args.trace:
+        emit_trace(n, trace_level=2)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -26,20 +26,17 @@ artifact CI uploads per commit.
 from __future__ import annotations
 
 import dataclasses
-import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._emit import write_bench
 from repro.core import mv
 from repro.core import workloads as W
 from repro.core import engine as E
 from repro.core.engine import make_executor
-
-_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _timed_call(fn, *args, inner=1):
@@ -155,8 +152,7 @@ def end_to_end(vm, params, storage, cfg, reps=3):
 
 def run_grid(n_txns=1024, reps=2, fast=True):
     """The PR 3 shard grid, hot-loop edition."""
-    record = {"suite": "hotpath", "n_txns": n_txns, "backend": "sharded",
-              "grid": {}}
+    record = {"n_txns": n_txns, "backend": "sharded", "grid": {}}
     n_locs_axis = (10**5, 10**7)
     shards_axis = (4, 16) if fast else (1, 4, 16)
     for n_locs in n_locs_axis:
@@ -207,12 +203,23 @@ def main():
     ap.add_argument("--full", dest="fast", action="store_false")
     ap.add_argument("--n-txns", type=int, default=1024)
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the record here instead of the repo-root "
+                    "BENCH_hotpath.json (CI regression checks write a "
+                    "fresh record next to the committed baseline)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="additionally capture the grid under "
+                    "jax.profiler.trace into DIR (perfetto dump; the "
+                    "engine's blockstm.* named scopes label the phases)")
     args = ap.parse_args()
-    record = run_grid(n_txns=args.n_txns, reps=args.reps, fast=args.fast)
-    path = os.path.join(_REPO_ROOT, "BENCH_hotpath.json")
-    with open(path, "w") as f:
-        json.dump(record, f, indent=2, sort_keys=True)
-        f.write("\n")
+    if args.profile:
+        from repro.obs.profile import profile_block
+        with profile_block(args.profile):
+            record = run_grid(n_txns=args.n_txns, reps=args.reps,
+                              fast=args.fast)
+    else:
+        record = run_grid(n_txns=args.n_txns, reps=args.reps, fast=args.fast)
+    path = write_bench("hotpath", record, out=args.out)
     print(f"wrote {path}  (min update-vs-build "
           f"{record['min_update_vs_build_x']:.2f}x)")
 

@@ -285,3 +285,25 @@ class DistShardedBackend(BackendDefaults):
         me = jax.lax.axis_index(AXIS)
         mine = jax.lax.dynamic_slice_in_dim(d, me * SL, SL)
         return index._replace(version=index.version + mine)
+
+    def trace_index_size(self, index: ShardedIndex,
+                         write_locs: jax.Array) -> jax.Array:
+        """Device-LOCAL CSR occupancy — deliberately not a collective: the
+        wave trace keeps the per-device counts and merges them into a
+        ``(D, cap)`` view on block exit (``obs.trace.merge_device_traces``),
+        which is the region load-balance telemetry."""
+        return index.starts[-1]
+
+    def trace_dirty_count(self, dirty: jax.Array) -> jax.Array:
+        """Count only the device's own slice of the global dirty mask (the
+        same span arithmetic as :meth:`bump_versions`), so the merged trace
+        shows per-device write traffic rather than D copies of the global
+        count."""
+        SL = self.regions_per_device
+        pad = self.n_devices * SL - self.n_shards
+        d = dirty.astype(jnp.int32)
+        if pad:
+            d = jnp.concatenate([d, jnp.zeros((pad,), jnp.int32)])
+        me = jax.lax.axis_index(AXIS)
+        return jax.lax.dynamic_slice_in_dim(d, me * SL, SL).sum(
+            dtype=jnp.int32)

@@ -58,12 +58,24 @@ def run_block_dist(program, params: Any, storage: jax.Array,
     the :class:`BlockResult` comes back replicated, so chains
     (``run_chain``) scan over it unchanged.
     """
+    from repro import obs
     from repro.core import engine as E
+    from repro.core.dist.plan import AXIS
     mesh = resolve_mesh(cfg)
 
-    inner = _sm(mesh,
-                lambda p, s: E._run_block_impl(program, p, s, cfg),
-                in_specs=(P(), P()), out_specs=P())
+    def body(p, s):
+        res = E._run_block_impl(program, p, s, cfg)
+        if cfg.trace_level:
+            # Per-device telemetry (local index occupancy / locally dirtied
+            # regions) folds into replicated (D, cap) buffers with ONE
+            # all_gather; every other trace field is a function of the
+            # replicated scheduler state and is already identical
+            # everywhere.
+            res = res._replace(trace=obs.merge_device_traces(res.trace,
+                                                             AXIS))
+        return res
+
+    inner = _sm(mesh, body, in_specs=(P(), P()), out_specs=P())
     return inner(params, storage)
 
 

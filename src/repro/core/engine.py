@@ -36,10 +36,25 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import executor, mv
 from repro.core.types import (NO_LOC, STORAGE, BlockResult, BlockStats,
                               EngineConfig, EngineState, ExecResult)
 from repro.core.vm import TxnProgram
+
+
+def _named_phase(name: str):
+    """Wrap a phase fn in ``jax.named_scope`` so its ops carry the phase
+    name in the HLO name stack — the profiler timeline (``make profile``)
+    groups per-phase work under these labels.  Metadata only: the compiled
+    program is unchanged."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with jax.named_scope(name):
+                return fn(*args, **kwargs)
+        return wrapped
+    return deco
 
 
 def _skip_enabled(cfg: EngineConfig) -> bool:
@@ -73,6 +88,7 @@ def _init_state(cfg: EngineConfig) -> EngineState:
         stat_dep_aborts=jnp.asarray(0, jnp.int32),
         stat_val_aborts=jnp.asarray(0, jnp.int32),
         stat_wrote_new=jnp.asarray(0, jnp.int32),
+        trace=obs.init_trace(cfg),
     )
 
 
@@ -195,7 +211,7 @@ def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
 
 
 def _validate_dirty(state: EngineState, cfg: EngineConfig,
-                    cur: jax.Array) -> jax.Array:
+                    cur: jax.Array) -> tuple[jax.Array, obs.ValTraceAux]:
     """Full-validation semantics at dirty-row cost (dirty-region skip).
 
     A row may skip validation iff, for every live read, the version of the
@@ -214,7 +230,9 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
     validation.  ``cur`` is the current global region-version vector (the
     caller's ``version_view`` — computed once per wave, since gathering it
     is a collective under the dist backend).  Returns the ``(n,)`` fail
-    mask.
+    mask plus the wave's skip telemetry
+    (:class:`~repro.obs.trace.ValTraceAux` — dead, and DCE'd, whenever the
+    wave trace does not consume it).
     """
     n, r = cfg.n_txns, cfg.max_reads
     backend = mv.make_backend(cfg)
@@ -222,7 +240,16 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
     live = state.read_locs != NO_LOC
     stale_read = live & (state.read_region_ver != cur[regions])
     need = state.executed & stale_read.any(axis=-1)
+    n_need = need.sum()
     k = cfg.dirty_cap()
+
+    def aux(fallback: jax.Array) -> obs.ValTraceAux:
+        lanes = jnp.where(fallback, n * r, k * r)
+        return obs.ValTraceAux(
+            val_reads=lanes.astype(jnp.int32),
+            skip_hits=(state.executed & ~need).sum(dtype=jnp.int32),
+            skip_misses=n_need.astype(jnp.int32),
+            skip_fallback=fallback)
 
     def full_path(_):
         readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
@@ -235,7 +262,7 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
         # A capacity covering every row can never narrow the work: the cond
         # predicate would always take the gather path, paying its
         # nonzero/gather/scatter machinery on top of full-width validation.
-        return full_path(None)
+        return full_path(None), aux(jnp.asarray(True))
 
     def gather_path(_):
         (rows,) = jnp.nonzero(need, size=k, fill_value=n)
@@ -249,9 +276,11 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
         return jnp.zeros((n,), jnp.bool_).at[rows].set(~valid_k,
                                                        mode="drop") & need
 
-    return jax.lax.cond(need.sum() <= k, gather_path, full_path, None)
+    fail = jax.lax.cond(n_need <= k, gather_path, full_path, None)
+    return fail, aux(n_need > k)
 
 
+@_named_phase("blockstm.validate")
 def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     """Validate executed txns against the fresh index (paper:
     validate_read_set + finish_validation).
@@ -272,9 +301,10 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     # One version gather serves the whole wave's validation (it is a
     # collective under the dist backend — don't re-issue it per use).
     cur = mv.make_backend(cfg).version_view(state.index) if skip else None
+    vaux = None
     if vw <= 0 or vw >= n:
         if skip:
-            fail = _validate_dirty(state, cfg, cur)
+            fail, vaux = _validate_dirty(state, cfg, cur)
         else:
             readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                                        (n, r))
@@ -282,6 +312,12 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
                                     state.read_writer, state.read_inc,
                                     readers)
             fail = state.executed & ~valid
+            if cfg.trace_level:
+                vaux = obs.ValTraceAux(
+                    val_reads=jnp.asarray(n * r, jnp.int32),
+                    skip_hits=jnp.asarray(0, jnp.int32),
+                    skip_misses=state.executed.sum(dtype=jnp.int32),
+                    skip_fallback=jnp.asarray(False))
         ok_for_commit = state.executed & ~fail
     else:
         start = jnp.minimum(state.frontier, n - vw)
@@ -299,6 +335,12 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
         in_window = jnp.zeros((n,), jnp.bool_).at[rows].set(True)
         below = jnp.arange(n, dtype=jnp.int32) < state.frontier
         ok_for_commit = state.executed & ~fail & (in_window | below)
+        if cfg.trace_level:
+            vaux = obs.ValTraceAux(
+                val_reads=jnp.asarray(vw * r, jnp.int32),
+                skip_hits=jnp.asarray(0, jnp.int32),
+                skip_misses=(state.executed & in_window).sum(dtype=jnp.int32),
+                skip_fallback=jnp.asarray(False))
 
     if skip:
         backend = mv.make_backend(cfg)
@@ -329,6 +371,9 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     # Commit frontier: longest validated-executed prefix (monotone).
     prefix = jnp.cumprod(ok_for_commit.astype(jnp.int32))
     frontier = jnp.maximum(state.frontier, prefix.sum().astype(jnp.int32))
+    if cfg.trace_level:
+        state = state._replace(trace=obs.record_validate(
+            state.trace, state.wave, fail, frontier, vaux))
     return state._replace(frontier=frontier)
 
 
@@ -347,6 +392,7 @@ class WaveDelta(NamedTuple):
                                # dirty-validation skip)
 
 
+@_named_phase("blockstm.execute")
 def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
                    storage: jax.Array,
                    cfg: EngineConfig) -> tuple[EngineState, WaveDelta]:
@@ -366,19 +412,26 @@ def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
         ver0=(mv.make_backend(cfg).version_view(state.index)
               if _skip_enabled(cfg) else state.index.version),
     )
-    return _apply_results(state, active_ids, active_mask, res, cfg), delta
+    new_state = _apply_results(state, active_ids, active_mask, res, cfg)
+    if cfg.trace_level:
+        new_state = new_state._replace(trace=obs.record_execute(
+            new_state.trace, state.wave, active_ids, active_mask,
+            success, active_mask & res.blocked, res))
+    return new_state, delta
 
 
+@_named_phase("blockstm.index")
 def _index_phase(state: EngineState, delta: WaveDelta,
                  cfg: EngineConfig) -> EngineState:
     """Fold the wave into the MV index: incremental delta merge (default) or
     the full-rebuild reference path, plus per-read region-version recording
     for the dirty-validation skip."""
     backend = mv.make_backend(cfg)
+    dirty = None
     if cfg.mv_update == "incremental":
-        index, _ = backend.update(state.index, state.write_locs,
-                                  delta.txn_ids, delta.old_write_locs,
-                                  delta.new_write_locs)
+        index, dirty = backend.update(state.index, state.write_locs,
+                                      delta.txn_ids, delta.old_write_locs,
+                                      delta.new_write_locs)
     else:
         index = backend.build(state.write_locs)
     state = state._replace(index=index)
@@ -390,6 +443,10 @@ def _index_phase(state: EngineState, delta: WaveDelta,
         state = state._replace(
             read_region_ver=state.read_region_ver.at[delta.txn_ids].set(
                 rrv, mode="drop"))
+    if cfg.trace_level:
+        state = state._replace(trace=obs.record_index(
+            state.trace, state.wave, backend, index, state.write_locs,
+            dirty))
     return state
 
 
@@ -401,6 +458,7 @@ def _wave_step(state: EngineState, program: TxnProgram, params: Any,
     return state._replace(wave=state.wave + 1)
 
 
+@_named_phase("blockstm.snapshot")
 def _snapshot(state: EngineState, storage: jax.Array,
               cfg: EngineConfig) -> jax.Array:
     """MVMemory.snapshot through the backend's batched ``snapshot`` hook
@@ -447,6 +505,7 @@ def _run_block_impl(program: TxnProgram, params: Any, storage: jax.Array,
         dep_aborts=state.stat_dep_aborts,
         val_aborts=state.stat_val_aborts,
         wrote_new=state.stat_wrote_new,
+        trace=state.trace,
     )
 
 

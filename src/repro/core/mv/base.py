@@ -159,6 +159,15 @@ class MVBackend(Protocol):
         """Index with ``version`` bumped by a global ``(n_regions,)`` mask."""
         ...
 
+    def trace_index_size(self, index: Any, write_locs: jax.Array) -> jax.Array:
+        """() i32 live entry count of THIS index view (wave telemetry).
+
+        Single-device backends report the global count; the dist backend
+        reports the device-LOCAL count — per-wave region load balance is
+        exactly what the trace wants to see (``repro.obs.trace``).
+        """
+        ...
+
 
 class BackendDefaults:
     """Protocol-default batched/placement hooks (single-device layouts).
@@ -188,6 +197,22 @@ class BackendDefaults:
     def bump_versions(self, index, dirty):
         return index._replace(version=index.version
                               + dirty.astype(jnp.int32))
+
+    def trace_index_size(self, index, write_locs) -> jax.Array:
+        # Every backend indexes exactly the block's live write slots, so
+        # the slot count IS the entry count for the flat layouts; CSR
+        # backends override with their own occupancy (the distinction that
+        # matters once the index is device-local).
+        return (write_locs != NO_LOC).sum(dtype=jnp.int32)
+
+    def trace_dirty_count(self, dirty) -> jax.Array:
+        """() i32 count of THIS view's dirtied regions for the wave trace.
+
+        ``dirty`` is ``update``'s global ``(n_regions,)`` mask; the dist
+        backend narrows it to the device's own region span so the merged
+        ``(D, cap)`` buffer shows where the write traffic actually landed.
+        """
+        return dirty.sum(dtype=jnp.int32)
 
 
 def dirty_from_delta(n_regions: int, region_of, old_write_locs: jax.Array,

@@ -203,6 +203,11 @@ class ShardedBackend(BackendDefaults):
         """Location -> region id.  NO_LOC maps into range (callers mask it)."""
         return jnp.clip(locs // self.shard_size, 0, self.n_shards - 1)
 
+    def trace_index_size(self, index: ShardedIndex,
+                         write_locs: jax.Array) -> jax.Array:
+        """CSR occupancy: ``starts[-1]`` is the total live entry count."""
+        return index.starts[-1]
+
     def build(self, write_locs: jax.Array) -> ShardedIndex:
         n, w = write_locs.shape
         if write_locs.dtype != jnp.int32:

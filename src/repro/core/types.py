@@ -69,6 +69,14 @@ class EngineConfig:
                                  # one over ALL available devices at trace
                                  # time (launch.mesh.make_mesh)
     track_write_stability: bool = True  # paper's wrote_new_location statistic
+    trace_level: int = 0         # in-jit wave telemetry (repro.obs.trace):
+                                 # 0 = off (compiles to the exact untraced
+                                 # program — the record hooks are never
+                                 # traced); 1 = per-wave scalar counters in
+                                 # (waves_cap,) ring buffers; 2 = level 1 +
+                                 # (waves_cap, window) dep-abort attribution
+                                 # edges.  The WaveTrace rides EngineState
+                                 # .trace and returns in BlockResult.trace.
 
     def __post_init__(self):
         if self.backend not in ("sorted", "dense", "sharded"):
@@ -92,6 +100,11 @@ class EngineConfig:
                 f"has no region partition to place (use backend='sharded')")
         if self.mesh is not None and not self.dist:
             raise ValueError("mesh is only meaningful with dist=True")
+        if self.trace_level not in (0, 1, 2):
+            raise ValueError(
+                f"trace_level={self.trace_level!r}: expected 0 (off), 1 "
+                f"(per-wave counters), or 2 (counters + abort-attribution "
+                f"edges) — see repro.obs.trace")
         if self.mesh is not None and tuple(self.mesh.axis_names) != \
                 ("regions",):
             raise ValueError(
@@ -153,6 +166,11 @@ class EngineState(NamedTuple):
     stat_dep_aborts: jax.Array   # () i32 executions aborted on an ESTIMATE read
     stat_val_aborts: jax.Array   # () i32 validation failures that aborted
     stat_wrote_new: jax.Array    # () i32 incarnations that wrote a new location
+    # -- telemetry -----------------------------------------------------------
+    trace: Any = None            # repro.obs.trace.WaveTrace per-wave ring
+                                 # buffers (trace_level >= 1), or None —
+                                 # an EMPTY pytree node, so level 0 carries
+                                 # exactly the pre-telemetry state
 
     @classmethod
     def dist_spec(cls) -> "EngineState":
@@ -169,7 +187,14 @@ class EngineState(NamedTuple):
             read_writer=P(), read_inc=P(), read_region_ver=P(),
             incarnation=P(), executed=P(), needs_exec=P(), blocked_by=P(),
             frontier=P(), wave=P(), index=P("regions"), stat_execs=P(),
-            stat_dep_aborts=P(), stat_val_aborts=P(), stat_wrote_new=P())
+            stat_dep_aborts=P(), stat_val_aborts=P(), stat_wrote_new=P(),
+            # Trace buffers cross phase boundaries as-if-replicated (prefix
+            # spec over the WaveTrace pytree, or the empty None node at
+            # level 0).  The per-device fields (mv_entries/dirty_regions)
+            # are only truly local INSIDE a block; the production dist path
+            # all_gathers them before the state ever crosses this spec
+            # (repro.obs.trace.merge_device_traces).
+            trace=P())
 
 
 class ExecResult(NamedTuple):
@@ -210,6 +235,9 @@ class BlockResult(NamedTuple):
     dep_aborts: jax.Array       # () i32
     val_aborts: jax.Array       # () i32
     wrote_new: jax.Array        # () i32
+    trace: Any = None           # WaveTrace ring buffers (trace_level >= 1);
+                                # rows past `waves` are unwritten — trim
+                                # host-side (repro.obs.export.trace_to_dict)
 
     def stats(self) -> BlockStats:
         """The snapshot-free view (typed; see :class:`BlockStats`)."""

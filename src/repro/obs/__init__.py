@@ -1,0 +1,34 @@
+"""Engine-native observability: in-jit wave telemetry, profiling spans,
+trace exporters.
+
+Three layers (see README.md in this package):
+
+* :mod:`repro.obs.trace`   — :class:`~repro.obs.trace.WaveTrace` in-jit
+  per-wave ring buffers, recorded by the engine's phase hooks and enabled
+  by the static ``EngineConfig.trace_level`` (level 0 = the exact untraced
+  program).
+* :mod:`repro.obs.profile` — host-side profiling spans
+  (``jax.profiler.TraceAnnotation``) and the ``jax.profiler.trace``
+  context manager behind ``make profile`` (perfetto-compatible dump).
+* :mod:`repro.obs.export` / :mod:`repro.obs.report` — Chrome-trace JSON
+  export and the wave-table / abort-chain report CLI behind
+  ``make report``.
+"""
+from __future__ import annotations
+
+from repro.obs.trace import (NO_TXN, ValTraceAux, WaveTrace, init_trace,
+                             merge_device_traces, record_execute,
+                             record_index, record_validate)
+
+__all__ = ["NO_TXN", "ValTraceAux", "WaveTrace", "init_trace",
+           "merge_device_traces", "record_execute", "record_index",
+           "record_validate", "export", "profile", "report"]
+
+
+def __getattr__(name):
+    # The host-side layers (numpy/profiler imports) load lazily so the
+    # engine's in-jit hook path pays only for repro.obs.trace.
+    if name in ("export", "profile", "report"):
+        import importlib
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

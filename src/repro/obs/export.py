@@ -1,0 +1,166 @@
+"""Wave-trace serialization + Chrome-trace (perfetto-loadable) exporter.
+
+Two output formats for one :class:`~repro.obs.trace.WaveTrace`:
+
+* ``wave-trace JSON`` — :func:`trace_to_dict` / :func:`write_wave_trace`:
+  the raw per-wave buffers, trimmed to the block's actual wave count, with
+  a schema tag and the level-2 abort edges compressed to live
+  ``[blocked, blocker]`` pairs.  :func:`load_wave_trace` round-trips it
+  back to numpy arrays (property-tested in ``tests/test_obs.py``);
+  ``repro.obs.report`` renders it as a wave table / abort-chain digest.
+* ``Chrome trace JSON`` — :func:`to_chrome_trace` /
+  :func:`write_chrome_trace`: the ``traceEvents`` array format that
+  https://ui.perfetto.dev and ``chrome://tracing`` load directly.  Each
+  wave becomes a complete ("X") event whose args carry its counters, and
+  every scalar counter additionally streams as a counter ("C") track, so
+  frontier convergence / abort bursts / MV-index growth are visible as
+  plots over the wave axis.
+
+Timebase: the in-jit buffers carry no wall-clock (a wave is one iteration
+of a fused ``lax.while_loop``), so by default the exporter lays waves on a
+VIRTUAL microsecond axis where each wave's width is its ``wave_size`` —
+span width ∝ attempted lanes.  Pass ``phase_times`` (per-wave
+execute/index/validate wall-clock seconds, e.g. from
+``benchmarks/hotpath_bench.py``'s phase replay) to switch the axis to real
+time and emit per-phase sub-spans on their own track.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Mapping, Sequence
+
+import numpy as np
+
+from repro.obs.trace import NO_TXN, WaveTrace
+
+#: Schema tag stamped into every serialized trace (bump on layout change).
+SCHEMA = "blockstm-wave-trace/v1"
+
+#: The scalar counter fields, in serialization order.
+COUNTER_FIELDS = ("frontier", "wave_size", "execs", "dep_aborts",
+                  "val_aborts", "exec_reads", "val_reads", "skip_hits",
+                  "skip_misses", "skip_fallback")
+
+#: Per-device fields — ``(cap,)`` single-device, ``(D, cap)`` after the
+#: dist merge; serialized with an explicit device axis either way.
+DEVICE_FIELDS = ("dirty_regions", "mv_entries")
+
+PHASES = ("execute", "index", "validate")
+
+
+def trace_to_dict(trace: WaveTrace, waves: Any,
+                  meta: Mapping[str, Any] | None = None) -> dict:
+    """Serialize a trace to a plain-JSON dict, trimmed to ``waves`` rows."""
+    w = int(waves)
+    out: dict[str, Any] = {"schema": SCHEMA, "waves": w,
+                           "meta": dict(meta or {})}
+    for f in COUNTER_FIELDS:
+        out[f] = np.asarray(getattr(trace, f))[:w].astype(int).tolist()
+    for f in DEVICE_FIELDS:
+        a = np.asarray(getattr(trace, f))
+        a = a[None, :] if a.ndim == 1 else a       # -> (D, cap) either way
+        out[f] = a[:, :w].astype(int).tolist()
+    out["devices"] = len(out[DEVICE_FIELDS[0]])
+    if trace.blocked_ids is not None:
+        bi = np.asarray(trace.blocked_ids)[:w]
+        bl = np.asarray(trace.blockers)[:w]
+        out["abort_edges"] = [
+            [[int(b), int(k)] for b, k in zip(bi[i], bl[i]) if b != NO_TXN]
+            for i in range(w)]
+    return out
+
+
+def write_wave_trace(path: str, trace: WaveTrace, waves: Any,
+                     meta: Mapping[str, Any] | None = None) -> dict:
+    d = trace_to_dict(trace, waves, meta=meta)
+    with open(path, "w") as f:
+        json.dump(d, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return d
+
+
+def load_wave_trace(path: str) -> dict:
+    """Load a serialized trace; counters come back as numpy int arrays."""
+    with open(path) as f:
+        d = json.load(f)
+    if d.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: schema {d.get('schema')!r}, "
+                         f"expected {SCHEMA!r}")
+    for f_ in COUNTER_FIELDS + DEVICE_FIELDS:
+        d[f_] = np.asarray(d[f_], dtype=np.int64)
+    return d
+
+
+def _counter_sum(d: Mapping[str, Any], field: str) -> np.ndarray:
+    """A device field as one global per-wave series (sum over devices)."""
+    return np.asarray(d[field]).sum(axis=0)
+
+
+def to_chrome_trace(d: Mapping[str, Any],
+                    phase_times: Sequence[Mapping[str, float]] | None = None,
+                    ) -> dict:
+    """Render a :func:`trace_to_dict` payload as Chrome trace events.
+
+    ``phase_times`` (optional): one mapping per wave with wall-clock
+    seconds for each of :data:`PHASES` — switches the time axis from the
+    virtual wave_size-proportional layout to real microseconds and adds a
+    per-phase span track.
+    """
+    waves = int(d["waves"])
+    pid = 0
+    ev: list[dict] = [
+        {"ph": "M", "pid": pid, "name": "process_name",
+         "args": {"name": "blockstm"}},
+        {"ph": "M", "pid": pid, "tid": 0, "name": "thread_name",
+         "args": {"name": "waves"}},
+    ]
+    if phase_times is not None:
+        ev.append({"ph": "M", "pid": pid, "tid": 1, "name": "thread_name",
+                   "args": {"name": "phases (wall-clock)"}})
+
+    dirty = _counter_sum(d, "dirty_regions")
+    mv = _counter_sum(d, "mv_entries")
+    ts = 0.0
+    for w in range(waves):
+        if phase_times is not None:
+            dur = sum(float(phase_times[w].get(p, 0.0)) * 1e6
+                      for p in PHASES)
+        else:
+            dur = float(max(int(d["wave_size"][w]), 1))
+        args = {f: int(d[f][w]) for f in COUNTER_FIELDS}
+        args["dirty_regions"] = int(dirty[w])
+        args["mv_entries"] = int(mv[w])
+        ev.append({"ph": "X", "pid": pid, "tid": 0, "name": f"wave {w}",
+                   "ts": ts, "dur": dur, "args": args})
+        if phase_times is not None:
+            pts = ts
+            for p in PHASES:
+                pdur = float(phase_times[w].get(p, 0.0)) * 1e6
+                ev.append({"ph": "X", "pid": pid, "tid": 1, "name": p,
+                           "ts": pts, "dur": pdur, "args": {"wave": w}})
+                pts += pdur
+        for name, series in (
+                ("frontier", d["frontier"]), ("execs", d["execs"]),
+                ("dep_aborts", d["dep_aborts"]),
+                ("val_aborts", d["val_aborts"]),
+                ("mv_entries", mv), ("dirty_regions", dirty)):
+            ev.append({"ph": "C", "pid": pid, "name": name, "ts": ts,
+                       "args": {name: int(series[w])}})
+        ts += dur
+    return {"traceEvents": ev, "displayTimeUnit": "ms",
+            "otherData": {"schema": d.get("schema", SCHEMA),
+                          "waves": waves,
+                          "devices": int(d.get("devices", 1)),
+                          "timebase": ("wall_clock" if phase_times
+                                       else "virtual_wave_size"),
+                          **dict(d.get("meta", {}))}}
+
+
+def write_chrome_trace(path: str, d: Mapping[str, Any],
+                       phase_times: Sequence[Mapping[str, float]] | None
+                       = None) -> dict:
+    ct = to_chrome_trace(d, phase_times=phase_times)
+    with open(path, "w") as f:
+        json.dump(ct, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return ct

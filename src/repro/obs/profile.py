@@ -1,0 +1,89 @@
+"""Host-side profiling spans: perfetto traces of the jitted engine.
+
+Two layers, complementary to the in-jit :mod:`repro.obs.trace` buffers:
+
+* The engine's phase functions are wrapped in ``jax.named_scope`` (see
+  ``core/engine.py::_named_phase``) — zero-runtime-cost HLO metadata, so
+  ``blockstm.execute`` / ``blockstm.index`` / ``blockstm.validate`` /
+  ``blockstm.snapshot`` label the compiled ops in ANY profiler view.
+* :func:`profile_block` wraps a region in ``jax.profiler.trace``, emitting a
+  perfetto ``.trace.json.gz`` under the chosen directory — open it at
+  https://ui.perfetto.dev (or ``chrome://tracing``) and the named scopes
+  above appear as spans inside the XLA executable.
+
+``make profile`` runs this module's CLI: one representative mixed-contract
+block (compile excluded — the block runs once to warm before the traced
+repetitions) profiled into ``profiles/``.
+
+    PYTHONPATH=src python -m repro.obs.profile --out profiles --reps 3
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Iterator
+
+import jax
+
+#: Name prefix shared by the engine's phase scopes (core/engine.py).
+PHASE_SCOPE_PREFIX = "blockstm."
+
+
+@contextlib.contextmanager
+def profile_block(logdir: str) -> Iterator[str]:
+    """Profile everything inside the ``with`` into a perfetto trace.
+
+    Thin, exception-safe wrapper over ``jax.profiler.trace``: creates
+    ``logdir``, runs the profiler around the body, and yields the logdir so
+    call sites can report where the ``plugins/profile/*/ *.trace.json.gz``
+    dump landed.  Host wall-time spans can be added inside the body with
+    ``jax.profiler.TraceAnnotation`` / :func:`annotate`.
+    """
+    os.makedirs(logdir, exist_ok=True)
+    with jax.profiler.trace(logdir):
+        yield logdir
+
+
+def annotate(name: str):
+    """A host wall-time span visible in the perfetto timeline.
+
+    Alias for ``jax.profiler.TraceAnnotation`` so benchmark code only
+    imports ``repro.obs``.  Use around host-side block boundaries (e.g. one
+    annotation per timed rep) — device-side phase structure already comes
+    from the engine's named scopes.
+    """
+    return jax.profiler.TraceAnnotation(name)
+
+
+def _profile_mixed_block(out: str, n_txns: int, reps: int) -> str:
+    """CLI body: profile ``reps`` executions of one mixed block."""
+    from repro.core import workloads as W
+    from repro.core.engine import make_executor
+
+    vm, params, storage, cfg = W.make_mixed_block(W.MixedSpec(), n_txns,
+                                                  seed=0)
+    run = make_executor(vm, cfg)
+    run(params, storage).snapshot.block_until_ready()   # compile + warm
+    with profile_block(out) as logdir:
+        for r in range(reps):
+            with annotate(f"block[{r}]"):
+                run(params, storage).snapshot.block_until_ready()
+    return logdir
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="profiles",
+                    help="profiler log directory (default: profiles/)")
+    ap.add_argument("--n-txns", type=int, default=512)
+    ap.add_argument("--reps", type=int, default=3,
+                    help="post-warmup executions to capture")
+    args = ap.parse_args(argv)
+    logdir = _profile_mixed_block(args.out, args.n_txns, args.reps)
+    print(f"perfetto trace written under {logdir}/ "
+          f"(open the .trace.json.gz at https://ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Wave-table / abort-chain CLI over a serialized wave trace.
+
+Renders the ``wave-trace JSON`` written by :mod:`repro.obs.export` (e.g.
+``WAVE_TRACE.json`` from ``benchmarks/engine_bench --trace``, or
+``make report``) as:
+
+* a per-wave table — frontier, wave size, exec/abort decomposition,
+  validation skip hits/misses, MV occupancy;
+* the per-device load-balance spread when the trace came from the dist
+  engine (``devices > 1``);
+* an abort-chain digest (level-2 traces only): the top ESTIMATE writers by
+  how many dep-aborts they caused, and the deepest blocking chains — edges
+  always point to lower txn ids (preset order), so the edge set is a DAG
+  and chain depth is exact, not heuristic.
+
+    PYTHONPATH=src python -m repro.obs.report WAVE_TRACE.json --chains 5
+"""
+from __future__ import annotations
+
+import sys
+from typing import Mapping
+
+import numpy as np
+
+from repro.obs.export import load_wave_trace
+
+_COLS = ("wave", "frontier", "size", "execs", "dep_ab", "val_ab",
+         "skip_hit", "skip_miss", "fb", "mv", "dirty")
+
+
+def wave_table(d: Mapping, max_rows: int = 0) -> str:
+    """The per-wave counter table as aligned text."""
+    waves = int(d["waves"])
+    mv = np.asarray(d["mv_entries"]).sum(axis=0)
+    dirty = np.asarray(d["dirty_regions"]).sum(axis=0)
+    rows = [_COLS]
+    shown = waves if max_rows <= 0 else min(waves, max_rows)
+    for w in range(shown):
+        rows.append((w, int(d["frontier"][w]), int(d["wave_size"][w]),
+                     int(d["execs"][w]), int(d["dep_aborts"][w]),
+                     int(d["val_aborts"][w]), int(d["skip_hits"][w]),
+                     int(d["skip_misses"][w]),
+                     "*" if d["skip_fallback"][w] else "",
+                     int(mv[w]), int(dirty[w])))
+    widths = [max(len(str(r[i])) for r in rows) for i in range(len(_COLS))]
+    lines = ["  ".join(str(c).rjust(widths[i]) for i, c in enumerate(r))
+             for r in rows]
+    if shown < waves:
+        lines.append(f"... ({waves - shown} more waves)")
+    return "\n".join(lines)
+
+
+def summary(d: Mapping) -> str:
+    waves = int(d["waves"])
+    ex = int(np.sum(d["execs"]))
+    da = int(np.sum(d["dep_aborts"]))
+    va = int(np.sum(d["val_aborts"]))
+    frontier = int(d["frontier"][waves - 1]) if waves else 0
+    lines = [f"waves={waves} frontier={frontier} execs={ex} "
+             f"dep_aborts={da} val_aborts={va} "
+             f"wasted={(da + va) / max(ex + da, 1):.1%}"]
+    dev = int(d.get("devices", 1))
+    if dev > 1:
+        mv = np.asarray(d["mv_entries"])          # (D, waves)
+        tot = mv[:, waves - 1] if waves else mv.sum(axis=1)
+        lines.append(
+            f"devices={dev} final mv entries/device "
+            f"min={int(tot.min())} max={int(tot.max())} "
+            f"imbalance={tot.max() / max(tot.min(), 1):.2f}x")
+    return "\n".join(lines)
+
+
+def _edge_counts(d: Mapping) -> dict[int, dict[int, int]]:
+    """blocked txn -> {blocker: times seen} across all waves."""
+    edges: dict[int, dict[int, int]] = {}
+    for wave_edges in d.get("abort_edges", []):
+        for blocked, blocker in wave_edges:
+            edges.setdefault(blocked, {})
+            edges[blocked][blocker] = edges[blocked].get(blocker, 0) + 1
+    return edges
+
+
+def abort_chains(d: Mapping, top: int = 5) -> str:
+    """Top blockers + deepest blocking chains from the level-2 edges."""
+    if "abort_edges" not in d:
+        return ("no abort edges in trace (recorded at trace_level >= 2 "
+                "only)")
+    edges = _edge_counts(d)
+    if not edges:
+        return "no dep-aborts recorded"
+    caused: dict[int, int] = {}
+    for blockers in edges.values():
+        for blocker, n in blockers.items():
+            caused[blocker] = caused.get(blocker, 0) + n
+    top_blockers = sorted(caused.items(), key=lambda kv: -kv[1])[:top]
+    lines = ["top blockers (txn: dep-aborts caused): "
+             + "  ".join(f"{t}:{n}" for t, n in top_blockers)]
+
+    # Edges respect the preset order (blocker < blocked), so chained waits
+    # form a DAG over txn ids; depth via memoized walk toward txn 0.
+    depth: dict[int, tuple[int, list[int]]] = {}
+
+    def walk(t: int) -> tuple[int, list[int]]:
+        if t in depth:
+            return depth[t]
+        if t not in edges:
+            depth[t] = (0, [t])
+            return depth[t]
+        best = max((walk(b) for b in edges[t]), key=lambda r: r[0])
+        depth[t] = (best[0] + 1, [t] + best[1])
+        return depth[t]
+
+    chains = sorted((walk(t) for t in edges), key=lambda r: -r[0])[:top]
+    lines.append("deepest blocking chains (blocked -> ... -> root):")
+    for dep, path in chains:
+        lines.append(f"  depth {dep}: " + " -> ".join(map(str, path)))
+    return "\n".join(lines)
+
+
+def render(d: Mapping, max_rows: int = 0, chains: int = 5) -> str:
+    return "\n".join([summary(d), "", wave_table(d, max_rows=max_rows), "",
+                      abort_chains(d, top=chains)])
+
+
+def main(argv: list[str] | None = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="WAVE_TRACE.json",
+                    help="wave-trace JSON (default: WAVE_TRACE.json)")
+    ap.add_argument("--rows", type=int, default=0,
+                    help="max wave rows to print (0 = all)")
+    ap.add_argument("--chains", type=int, default=5,
+                    help="abort chains / top blockers to show")
+    args = ap.parse_args(argv)
+    try:
+        d = load_wave_trace(args.path)
+    except FileNotFoundError:
+        sys.exit(f"{args.path} not found — generate one with "
+                 f"`PYTHONPATH=src python -m benchmarks.engine_bench "
+                 f"--workload mixed --trace`")
+    print(render(d, max_rows=args.rows, chains=args.chains))
+
+
+if __name__ == "__main__":
+    main()

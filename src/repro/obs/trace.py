@@ -1,0 +1,198 @@
+"""In-jit wave trace buffers: the engine's per-wave telemetry substrate.
+
+The Block-STM engine runs as ONE jitted ``lax.while_loop`` — by the time a
+block returns, every intermediate the paper's evaluation plots (per-wave
+abort counts, the convergence of the commit frontier, which txn chains
+forced re-execution) has been consumed by the loop carry.  A
+:class:`WaveTrace` is a fixed-shape pytree of per-wave ring buffers (sized
+by ``EngineConfig.waves_cap()``) that rides in :class:`EngineState.trace`
+and is written, wave by wave, by three record hooks the engine calls from
+its phase functions:
+
+=================  ========================================================
+hook               fields written (at index ``state.wave``)
+=================  ========================================================
+:func:`record_execute`   wave_size, execs, dep_aborts, exec_reads,
+                         blocked_ids / blockers (level 2)
+:func:`record_index`     dirty_regions, mv_entries
+:func:`record_validate`  val_aborts, val_reads, skip_hits, skip_misses,
+                         skip_fallback, frontier
+=================  ========================================================
+
+Cost model — ``EngineConfig.trace_level`` is STATIC:
+
+* level 0 (default): :func:`init_trace` returns ``None`` and the engine
+  never calls a record hook (plain Python ``if cfg.trace_level`` at the
+  call sites), so the compiled program is *exactly* today's engine — not
+  "the same after DCE", the tracing code is never traced at all.
+* level 1: the per-wave scalar counters — one ``(cap,)`` buffer per field,
+  one dynamic-index ``.set`` per field per wave.
+* level 2: level 1 plus the ``(cap, window)`` abort-attribution edges
+  (which txn blocked on which ESTIMATE writer, per wave).
+
+Multi-device (``cfg.dist``): every field derived from the replicated
+scheduler state (sizes, aborts, frontier, read counts) is bit-identical on
+all devices and travels replicated; ``mv_entries`` and ``dirty_regions``
+are *per-device* quantities (each device's LOCAL index occupancy / locally
+dirtied regions), and :func:`merge_device_traces` folds them into
+``(n_devices, cap)`` buffers with ONE ``all_gather`` as the block exits the
+``shard_map`` — the load-balance view a Zipfian region skew shows up in.
+
+Counter invariants (property-tested in ``tests/test_obs.py``):
+
+* ``wave_size[w] == execs[w] + dep_aborts[w]`` — every selected lane either
+  finishes or dep-aborts;
+* ``execs/dep_aborts/val_aborts[:waves].sum()`` equal the corresponding
+  :class:`~repro.core.types.BlockStats` scalars exactly;
+* ``frontier`` is monotone and reaches ``n_txns`` iff the block committed;
+* every live blocker edge respects the preset order
+  (``blockers < blocked_ids``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NO_LOC
+
+#: Sentinel for empty lanes in the level-2 edge buffers.
+NO_TXN = -1
+
+
+class WaveTrace(NamedTuple):
+    """Per-wave telemetry ring buffers (shapes: cap = ``cfg.waves_cap()``,
+    win = ``cfg.window``, D = mesh size after :func:`merge_device_traces`).
+
+    Rows past the block's actual wave count are left at their init values
+    (zeros; edge buffers at :data:`NO_TXN`); hosts trim with
+    ``BlockResult.waves``.
+    """
+
+    # -- level >= 1: per-wave scalar counters -------------------------------
+    frontier: jax.Array       # (cap,) i32 commit frontier at end of wave
+    wave_size: jax.Array      # (cap,) i32 lanes selected (attempted execs)
+    execs: jax.Array          # (cap,) i32 lanes that finished execution
+    dep_aborts: jax.Array     # (cap,) i32 lanes aborted on an ESTIMATE read
+    val_aborts: jax.Array     # (cap,) i32 validation failures this wave
+    exec_reads: jax.Array     # (cap,) i32 live read resolutions issued by
+                              #   the wave's executions
+    val_reads: jax.Array      # (cap,) i32 read lanes issued by validation
+                              #   (full pass: n*R; windowed: vw*R; dirty
+                              #   gather path: cap_rows*R)
+    skip_hits: jax.Array      # (cap,) i32 executed rows skipped as
+                              #   version-clean (dirty-validation skip)
+    skip_misses: jax.Array    # (cap,) i32 rows that needed validation
+    skip_fallback: jax.Array  # (cap,) bool wave fell back to the full pass
+    dirty_regions: jax.Array  # (cap,) i32 regions dirtied by the wave's
+                              #   update; -1 under mv_update='rebuild'.
+                              #   ((D, cap) per-device after dist merge)
+    mv_entries: jax.Array     # (cap,) i32 live MV index entries after the
+                              #   index phase ((D, cap) local per-device
+                              #   after dist merge)
+    # -- level >= 2: abort attribution edges --------------------------------
+    blocked_ids: Any = None   # (cap, win) i32 txn ids dep-aborted this wave,
+                              #   NO_TXN on non-blocked lanes
+    blockers: Any = None      # (cap, win) i32 the ESTIMATE writer each
+                              #   blocked txn waits on, NO_TXN likewise
+
+
+def init_trace(cfg) -> WaveTrace | None:
+    """Fresh zeroed buffers for one block (``None`` at trace level 0)."""
+    if cfg.trace_level <= 0:
+        return None
+    cap = cfg.waves_cap()
+    count = lambda: jnp.zeros((cap,), jnp.int32)
+    tr = WaveTrace(
+        frontier=count(), wave_size=count(), execs=count(),
+        dep_aborts=count(), val_aborts=count(), exec_reads=count(),
+        val_reads=count(), skip_hits=count(), skip_misses=count(),
+        skip_fallback=jnp.zeros((cap,), jnp.bool_),
+        dirty_regions=count(), mv_entries=count())
+    if cfg.trace_level >= 2:
+        edges = jnp.full((cap, cfg.window), NO_TXN, jnp.int32)
+        tr = tr._replace(blocked_ids=edges, blockers=edges)
+    return tr
+
+
+def _i32sum(mask: jax.Array) -> jax.Array:
+    return mask.sum(dtype=jnp.int32)
+
+
+def record_execute(trace: WaveTrace, wave: jax.Array, active_ids: jax.Array,
+                   active_mask: jax.Array, success: jax.Array,
+                   blocked: jax.Array, res) -> WaveTrace:
+    """Execute-phase counters + (level 2) the wave's dep-abort edges.
+
+    ``res`` is the wave's :class:`~repro.core.types.ExecResult`;
+    ``success``/``blocked`` partition ``active_mask`` (a lane either
+    finishes or hits an ESTIMATE), which is the per-wave decomposition of
+    ``BlockStats.execs``/``dep_aborts``.
+    """
+    w = wave
+    live_reads = (res.read_locs != NO_LOC) & active_mask[:, None]
+    trace = trace._replace(
+        wave_size=trace.wave_size.at[w].set(_i32sum(active_mask)),
+        execs=trace.execs.at[w].set(_i32sum(success)),
+        dep_aborts=trace.dep_aborts.at[w].set(_i32sum(blocked)),
+        exec_reads=trace.exec_reads.at[w].set(_i32sum(live_reads)))
+    if trace.blocked_ids is not None:
+        trace = trace._replace(
+            blocked_ids=trace.blocked_ids.at[w].set(
+                jnp.where(blocked, active_ids, NO_TXN)),
+            blockers=trace.blockers.at[w].set(
+                jnp.where(blocked, res.blocker, NO_TXN)))
+    return trace
+
+
+def record_index(trace: WaveTrace, wave: jax.Array, backend, index,
+                 write_locs: jax.Array, dirty) -> WaveTrace:
+    """Index-phase counters: this wave's dirty-region count (``-1`` on the
+    rebuild reference path, which has no delta) and the post-update live
+    entry count — both PER-DEVICE quantities under the dist backend."""
+    w = wave
+    n_dirty = (backend.trace_dirty_count(dirty) if dirty is not None
+               else jnp.asarray(-1, jnp.int32))
+    return trace._replace(
+        dirty_regions=trace.dirty_regions.at[w].set(n_dirty),
+        mv_entries=trace.mv_entries.at[w].set(
+            backend.trace_index_size(index, write_locs)))
+
+
+class ValTraceAux(NamedTuple):
+    """What :func:`record_validate` needs from the validation phase."""
+
+    val_reads: jax.Array      # () i32 read lanes issued
+    skip_hits: jax.Array      # () i32 rows skipped version-clean
+    skip_misses: jax.Array    # () i32 rows examined
+    skip_fallback: jax.Array  # () bool full-pass fallback taken
+
+
+def record_validate(trace: WaveTrace, wave: jax.Array, fail: jax.Array,
+                    frontier: jax.Array, aux: ValTraceAux) -> WaveTrace:
+    """Validation-phase counters + the end-of-wave commit frontier."""
+    w = wave
+    return trace._replace(
+        val_aborts=trace.val_aborts.at[w].set(_i32sum(fail)),
+        frontier=trace.frontier.at[w].set(frontier),
+        val_reads=trace.val_reads.at[w].set(aux.val_reads),
+        skip_hits=trace.skip_hits.at[w].set(aux.skip_hits),
+        skip_misses=trace.skip_misses.at[w].set(aux.skip_misses),
+        skip_fallback=trace.skip_fallback.at[w].set(aux.skip_fallback))
+
+
+def merge_device_traces(trace: WaveTrace, axis_name: str) -> WaveTrace:
+    """Fold per-device buffers into the global trace (dist engine exit).
+
+    Called INSIDE the ``shard_map`` after the engine loop: stacks the two
+    genuinely per-device fields and ``all_gather``s them once along the
+    mesh axis, turning their ``(cap,)`` local buffers into ``(D, cap)``
+    per-device views (replicated, like every other output of the dist
+    engine).  All remaining fields are functions of the replicated
+    scheduler state and pass through unchanged.
+    """
+    local = jnp.stack([trace.dirty_regions, trace.mv_entries])   # (2, cap)
+    gathered = jax.lax.all_gather(local, axis_name)              # (D, 2, cap)
+    return trace._replace(dirty_regions=gathered[:, 0],
+                          mv_entries=gathered[:, 1])

@@ -1,0 +1,332 @@
+"""Observability property suite (``repro.obs``).
+
+* Zero-cost gating — ``trace_level=0`` (the default) carries ``trace=None``
+  through the engine: byte-identical snapshots and identical stats to every
+  traced level, on every MV backend and on the dist engine across 1/2/8
+  virtual devices.
+* Counter invariants — per-wave buffers decompose the engine's BlockResult
+  scalars exactly: ``wave_size == execs + dep_aborts`` per wave, the
+  per-wave sums equal the block totals, the frontier is monotone and
+  reaches ``n_txns``, and every level-2 abort edge respects the preset
+  order (``blocker < blocked``).
+* Compile-once — a traced executor still serves every contract mix with
+  zero recompiles.
+* Export — wave-trace JSON round-trips bit-exactly; the Chrome-trace
+  export carries one complete event per wave; the report CLI renders.
+* Profiling — ``obs.profile.profile_block`` writes a perfetto dump.
+
+Dist coverage follows ``tests/test_dist.py``'s convention: the suite skips
+mesh tests below 8 devices and re-runs itself in a subprocess with
+``--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+import glob
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+from _hypo import given, settings, st
+
+from repro import obs
+from repro.core import workloads as W
+from repro.core.engine import make_executor, run_block
+from repro.core.types import EngineConfig
+from repro.launch.mesh import make_mesh
+from repro.obs import export as X
+from repro.obs import report as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+REQUIRED = 8
+_FLAG = f"--xla_force_host_platform_device_count={REQUIRED}"
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < REQUIRED,
+    reason=f"needs {REQUIRED} virtual devices (XLA_FLAGS={_FLAG}); "
+    f"covered via the subprocess runner")
+
+STATS = ("committed", "waves", "execs", "dep_aborts", "val_aborts",
+         "wrote_new")
+
+
+def _stats(res):
+    return tuple(int(getattr(res, f)) for f in STATS)
+
+
+def _block(n_txns=48, seed=3, backend="sorted", trace_level=0, **kw):
+    shards = dict(n_shards=8) if backend == "sharded" else {}
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=seed, backend=backend, **shards, **kw)
+    return vm, params, storage, dataclasses.replace(cfg,
+                                                    trace_level=trace_level)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess runner: tier-1 dist coverage without process-wide XLA flags
+# ---------------------------------------------------------------------------
+
+def test_obs_suite_under_virtual_mesh():
+    if len(jax.devices()) >= REQUIRED:
+        pytest.skip("already on a virtual mesh; suite runs directly")
+    env = dict(os.environ, XLA_FLAGS=_FLAG, JAX_PLATFORMS="cpu")
+    env.setdefault("REPRO_FAST_EXAMPLES", "2")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=3000)
+    assert r.returncode == 0, \
+        f"obs suite failed under {_FLAG}:\n{r.stdout[-4000:]}\n" \
+        f"{r.stderr[-2000:]}"
+
+
+# ---------------------------------------------------------------------------
+# Gating: level 0 is the untraced engine; invalid levels refuse
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_unknown_trace_level():
+    with pytest.raises(ValueError, match="trace_level"):
+        EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
+                     trace_level=3)
+
+
+def test_level0_trace_is_empty_pytree():
+    _, _, _, cfg = _block(trace_level=0)
+    assert obs.init_trace(cfg) is None
+    # and an enabled config allocates buffers sized by the wave cap
+    _, _, _, c2 = _block(trace_level=2)
+    tr = obs.init_trace(c2)
+    assert tr.frontier.shape == (c2.waves_cap(),)
+    assert tr.blocked_ids.shape == (c2.waves_cap(), c2.window)
+
+
+@pytest.mark.parametrize("backend", ["dense", "sorted", "sharded"])
+def test_level0_matches_traced_levels(backend):
+    vm, params, storage, cfg = _block(backend=backend, trace_level=0)
+    ref = run_block(vm, params, storage, cfg)
+    assert ref.trace is None
+    for lvl in (1, 2):
+        res = run_block(vm, params, storage,
+                        dataclasses.replace(cfg, trace_level=lvl))
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot),
+                                      err_msg=f"{backend} level {lvl}")
+        assert _stats(res) == _stats(ref), (backend, lvl)
+        assert (res.trace.blocked_ids is None) == (lvl < 2)
+
+
+def test_traced_executor_zero_recompiles_across_mixes():
+    vm, params, storage, cfg = _block(trace_level=2)
+    run = make_executor(vm, cfg)
+    for i, ratios in enumerate([(1, 1, 1), (8, 1, 1), (1, 1, 8)]):
+        _, params, storage, _ = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), cfg.n_txns, seed=20 + i)
+        res = run(params, storage)
+        assert bool(res.committed)
+    assert run._cache_size() == 1, run._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# Counter invariants: the buffers decompose BlockStats exactly
+# ---------------------------------------------------------------------------
+
+def _check_invariants(res, n_txns):
+    t, w = res.trace, int(res.waves)
+    ws, ex, da = (np.asarray(t.wave_size), np.asarray(t.execs),
+                  np.asarray(t.dep_aborts))
+    np.testing.assert_array_equal(ws[:w], ex[:w] + da[:w])
+    assert ex[:w].sum() == int(res.execs)
+    assert da[:w].sum() == int(res.dep_aborts)
+    assert np.asarray(t.val_aborts)[:w].sum() == int(res.val_aborts)
+    fr = np.asarray(t.frontier)[:w]
+    assert (np.diff(fr) >= 0).all(), "frontier must be monotone"
+    assert fr[-1] == n_txns and bool(res.committed)
+    # unreached waves stay at init values
+    assert (ws[w:] == 0).all() and (fr[w:] == 0).all()
+    # reads issued only on waves that executed something
+    er = np.asarray(t.exec_reads)[:w]
+    assert ((er > 0) == (ws[:w] > 0)).all() or (er[ws[:w] > 0] >= 0).all()
+    if t.blocked_ids is not None:
+        bi, bl = np.asarray(t.blocked_ids), np.asarray(t.blockers)
+        live = bi != obs.NO_TXN
+        # one edge per dep-aborted lane, blocker strictly earlier in the
+        # preset order, both ends valid txn ids
+        np.testing.assert_array_equal(live[:w].sum(axis=1), da[:w])
+        assert (bl[live] < bi[live]).all()
+        assert (bl[live] >= 0).all() and (bi[live] < n_txns).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       backend=st.sampled_from(["dense", "sorted", "sharded"]))
+def test_trace_counter_invariants(seed, backend):
+    vm, params, storage, cfg = _block(seed=seed, backend=backend,
+                                      trace_level=2)
+    res = run_block(vm, params, storage, cfg)
+    _check_invariants(res, cfg.n_txns)
+
+
+def test_trace_invariants_across_engine_variants():
+    """The hooks must stay coherent under every maintenance/validation
+    regime (the rebuild path has no delta: dirty_regions pins to -1)."""
+    vm, params, storage, cfg = _block(backend="sharded", trace_level=2)
+    for variant in (dict(),
+                    dict(mv_update="rebuild", dirty_validation=False),
+                    dict(dirty_validation=False),
+                    dict(validation_window=16),
+                    dict(dirty_validation_cap=2)):
+        c = dataclasses.replace(cfg, **variant)
+        res = run_block(vm, params, storage, c)
+        _check_invariants(res, cfg.n_txns)
+        w = int(res.waves)
+        dirty = np.asarray(res.trace.dirty_regions)[:w]
+        if variant.get("mv_update") == "rebuild":
+            assert (dirty == -1).all()
+        else:
+            assert (dirty >= 0).all()
+        if not c.dirty_validation:
+            assert (np.asarray(res.trace.skip_hits)[:w] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Dist engine: replicated fields identical, per-device fields sum exactly
+# ---------------------------------------------------------------------------
+
+REPLICATED_FIELDS = ("frontier", "wave_size", "execs", "dep_aborts",
+                     "val_aborts", "exec_reads", "val_reads", "skip_hits",
+                     "skip_misses", "skip_fallback", "blocked_ids",
+                     "blockers")
+
+
+@needs_mesh
+def test_dist_trace_matches_single_device():
+    vm, params, storage, cfg = _block(n_txns=64, backend="sharded",
+                                      trace_level=2, n_locs=50_000,
+                                      zipf_s=1.1)
+    ref = run_block(vm, params, storage, cfg)
+    for d in (1, 2, 8):
+        dcfg = dataclasses.replace(cfg, dist=True,
+                                   mesh=make_mesh("regions", (d,)))
+        res = run_block(vm, params, storage, dcfg)
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot))
+        assert _stats(res) == _stats(ref)
+        for f in REPLICATED_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(res.trace, f)),
+                np.asarray(getattr(ref.trace, f)), err_msg=f"D={d} {f}")
+        # per-device views: (D, cap), summing to the single-device counts
+        for f in ("mv_entries", "dirty_regions"):
+            a = np.asarray(getattr(res.trace, f))
+            assert a.shape == (d, cfg.waves_cap()), (f, a.shape)
+            np.testing.assert_array_equal(
+                a.sum(axis=0), np.asarray(getattr(ref.trace, f)),
+                err_msg=f"D={d} {f}")
+        # the Chrome-trace export of the DIST trace still sums to the
+        # block's stats (the acceptance property, mesh edition)
+        ct = X.to_chrome_trace(X.trace_to_dict(res.trace, res.waves))
+        spans = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+        for field in ("execs", "dep_aborts", "val_aborts"):
+            assert sum(e["args"][field] for e in spans) == int(
+                getattr(res, field)), (d, field)
+
+
+@needs_mesh
+def test_dist_level0_carries_no_trace():
+    vm, params, storage, cfg = _block(n_txns=32, backend="sharded",
+                                      trace_level=0)
+    dcfg = dataclasses.replace(cfg, dist=True,
+                               mesh=make_mesh("regions", (8,)))
+    res = run_block(vm, params, storage, dcfg)
+    assert res.trace is None and bool(res.committed)
+
+
+# ---------------------------------------------------------------------------
+# Export round-trip, Chrome trace, report, profiler dump
+# ---------------------------------------------------------------------------
+
+def _traced_result():
+    vm, params, storage, cfg = _block(trace_level=2)
+    return run_block(vm, params, storage, cfg), cfg
+
+
+def test_wave_trace_roundtrip(tmp_path):
+    res, cfg = _traced_result()
+    path = str(tmp_path / "WAVE_TRACE.json")
+    X.write_wave_trace(path, res.trace, res.waves, meta={"n_txns": 48})
+    d = X.load_wave_trace(path)
+    assert d["waves"] == int(res.waves) and d["meta"]["n_txns"] == 48
+    w = int(res.waves)
+    for f in X.COUNTER_FIELDS:
+        np.testing.assert_array_equal(
+            d[f], np.asarray(getattr(res.trace, f))[:w].astype(int),
+            err_msg=f)
+    for f in X.DEVICE_FIELDS:
+        np.testing.assert_array_equal(
+            d[f][0], np.asarray(getattr(res.trace, f))[:w].astype(int),
+            err_msg=f)
+    # level-2 edges come back as exactly the live (blocked, blocker) pairs
+    bi = np.asarray(res.trace.blocked_ids)[:w]
+    bl = np.asarray(res.trace.blockers)[:w]
+    for wv, pairs in enumerate(d["abort_edges"]):
+        expect = [[int(b), int(k)] for b, k in zip(bi[wv], bl[wv])
+                  if b != obs.NO_TXN]
+        assert pairs == expect, wv
+
+
+def test_wave_trace_schema_handshake(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        f.write('{"schema": "something-else/v9", "waves": 0}')
+    with pytest.raises(ValueError, match="schema"):
+        X.load_wave_trace(path)
+
+
+def test_chrome_trace_export(tmp_path):
+    res, cfg = _traced_result()
+    d = X.trace_to_dict(res.trace, res.waves)
+    ct = X.write_chrome_trace(str(tmp_path / "ct.json"), d)
+    spans = [e for e in ct["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == int(res.waves)
+    # the exported per-wave counters sum exactly to the block's stats
+    for field in ("execs", "dep_aborts", "val_aborts"):
+        assert sum(e["args"][field] for e in spans) == int(
+            getattr(res, field)), field
+    # virtual timebase: span width == the wave's attempted-lane count
+    ws = np.asarray(res.trace.wave_size)
+    for i, e in enumerate(spans):
+        assert e["dur"] == max(int(ws[i]), 1)
+        assert e["args"]["execs"] == int(np.asarray(res.trace.execs)[i])
+    # wall-clock timebase when per-phase timings are supplied
+    pt = [{"execute": 1e-3, "index": 5e-4, "validate": 2.5e-4}
+          for _ in range(int(res.waves))]
+    ct2 = X.to_chrome_trace(d, phase_times=pt)
+    phase_spans = [e for e in ct2["traceEvents"]
+                   if e["ph"] == "X" and e.get("tid") == 1]
+    assert len(phase_spans) == 3 * int(res.waves)
+    assert ct2["otherData"]["timebase"] == "wall_clock"
+
+
+def test_report_renders(tmp_path):
+    res, cfg = _traced_result()
+    path = str(tmp_path / "WAVE_TRACE.json")
+    X.write_wave_trace(path, res.trace, res.waves)
+    out = R.render(X.load_wave_trace(path), max_rows=6, chains=3)
+    assert f"frontier={cfg.n_txns}" in out
+    assert "top blockers" in out or "no dep-aborts" in out
+
+
+def test_profile_block_writes_perfetto_dump(tmp_path):
+    logdir = str(tmp_path / "prof")
+    with obs.profile.profile_block(logdir):
+        vm, params, storage, cfg = _block(n_txns=16)
+        with obs.profile.annotate("block[0]"):
+            res = run_block(vm, params, storage, cfg)
+            res.snapshot.block_until_ready()
+    dumps = glob.glob(os.path.join(logdir, "**", "*.trace.json.gz"),
+                      recursive=True)
+    assert dumps, f"no perfetto dump under {logdir}"
