@@ -2,7 +2,8 @@
 PY ?= python
 
 .PHONY: test test-fast test-dist bench-smoke bench bench-baselines \
-	bench-shards bench-hotpath bench-dist profile report check-regression
+	bench-shards bench-hotpath bench-dist profile report check-regression \
+	check-regression-dist
 
 test:
 	$(PY) -m pytest -x -q
@@ -68,3 +69,11 @@ check-regression:
 		--out BENCH_hotpath.fresh.json
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		BENCH_hotpath.fresh.json
+
+# Same gate for the multi-device record (throughput in the 10x band plus the
+# execute partition's exact lanes/routed-bytes-per-device structure).
+check-regression-dist:
+	PYTHONPATH=src $(PY) -m benchmarks.dist_bench --fast \
+		--out BENCH_dist.fresh.json
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		BENCH_dist.fresh.json

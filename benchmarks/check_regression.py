@@ -1,27 +1,44 @@
-"""CI perf-regression gate over the committed hotpath baseline.
+"""CI perf-regression gate over the committed benchmark baselines.
 
-Compares a freshly measured ``BENCH_hotpath.json`` (written by
-``hotpath_bench --out``) against the committed repo-root baseline and
-fails (exit 1) only on ORDER-OF-MAGNITUDE regressions — CI machines are
-shared and noisy, so the default tolerance is 10x: the gate exists to
-catch "the incremental path silently fell off a perf cliff" (e.g. an
-accidental O(block) rebuild inside ``backend.update``, or the engine
-recompiling per wave), not 20% jitter.
+Compares a freshly measured record (``hotpath_bench --out`` /
+``dist_bench --out``) against the committed repo-root baseline of the
+same suite and fails (exit 1) only on ORDER-OF-MAGNITUDE regressions —
+CI machines are shared and noisy, so the default tolerance is 10x: the
+gate exists to catch "the incremental path silently fell off a perf
+cliff" (e.g. an accidental O(block) rebuild inside ``backend.update``,
+the engine recompiling per wave, or the dist engine's throughput
+collapsing under a routing change), not 20% jitter.
 
-Checked per grid cell present in BOTH records:
+``hotpath`` records check, per grid cell present in BOTH records:
 
 * ``tps_incremental``        — end-to-end engine throughput;
 * ``update_vs_build_x``      — the incremental-maintenance advantage
                                (must not collapse toward the rebuild path);
 
-plus the aggregate ``median_update_vs_build_x``.  Cells present in only
-one record (grid drift) are reported but never fail the gate.  Both
-records must carry the emitter's current ``schema_rev``
+plus the aggregate ``median_update_vs_build_x``.
+
+``dist`` records check, per grid cell present in BOTH records:
+
+* ``tps_dist``               — end-to-end dist-engine throughput;
+* ``tps_single_device``      — the single-device reference on the same
+                               block (so a shared slowdown reads as two
+                               correlated notes, not a dist regression);
+
+plus the structural execute-partition quantities (``lanes_per_device``,
+``routed_read_bytes_per_device``): these are pure functions of the config,
+so at equal block size any drift is a partition change, which fails the
+gate outright.
+
+Cells present in only one record (grid drift) are reported but never fail
+the gate.  Both records must carry the emitter's current ``schema_rev``
 (``benchmarks/_emit.py``) — incomparable layouts refuse loudly instead
-of comparing garbage.
+of comparing garbage; the suite is read from the fresh record and must
+match the baseline's.
 
     PYTHONPATH=src python -m benchmarks.hotpath_bench --fast --out /tmp/fresh.json
     PYTHONPATH=src python -m benchmarks.check_regression /tmp/fresh.json
+    PYTHONPATH=src python -m benchmarks.dist_bench --fast --out /tmp/fresh_dist.json
+    PYTHONPATH=src python -m benchmarks.check_regression /tmp/fresh_dist.json
 """
 from __future__ import annotations
 
@@ -32,17 +49,15 @@ from benchmarks._emit import bench_path, load_bench
 #: Fail only when fresh is worse than baseline by this factor.
 DEFAULT_TOLERANCE = 10.0
 
-#: Per-cell higher-is-better metrics to gate on.
+#: Per-cell higher-is-better metrics to gate on, by suite.
 CELL_METRICS = ("tps_incremental", "update_vs_build_x")
+DIST_CELL_METRICS = ("tps_dist", "tps_single_device")
+
+#: Per-cell exact structural quantities of the dist execute partition.
+DIST_STRUCTURAL = ("lanes_per_device", "routed_read_bytes_per_device")
 
 
-def compare(baseline: dict, fresh: dict,
-            tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
-                                                           list[str]]:
-    """Returns (failures, notes); empty failures == gate passes."""
-    failures: list[str] = []
-    notes: list[str] = []
-
+def _checker(failures: list[str], notes: list[str], tolerance: float):
     def check(name: str, base_v: float, fresh_v: float) -> None:
         ratio = fresh_v / max(base_v, 1e-12)
         line = f"{name}: baseline {base_v:.3g} fresh {fresh_v:.3g} " \
@@ -51,10 +66,11 @@ def compare(baseline: dict, fresh: dict,
             failures.append(line + f"  << {tolerance:.0f}x regression")
         else:
             notes.append(line)
+    return check
 
-    check("median_update_vs_build_x",
-          float(baseline["median_update_vs_build_x"]),
-          float(fresh["median_update_vs_build_x"]))
+
+def _grid_cells(baseline: dict, fresh: dict, notes: list[str]):
+    """Yield (cell, base, fresh) for cells in BOTH records; note drift."""
     bgrid, fgrid = baseline.get("grid", {}), fresh.get("grid", {})
     for cell in sorted(set(bgrid) | set(fgrid)):
         if cell not in bgrid or cell not in fgrid:
@@ -62,7 +78,21 @@ def compare(baseline: dict, fresh: dict,
                          f"{'baseline' if cell in bgrid else 'fresh'} "
                          f"(grid drift, not gated)")
             continue
-        b, f = bgrid[cell], fgrid[cell]
+        yield cell, bgrid[cell], fgrid[cell]
+
+
+def compare(baseline: dict, fresh: dict,
+            tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
+                                                           list[str]]:
+    """Hotpath-suite gate. Returns (failures, notes); empty failures == OK."""
+    failures: list[str] = []
+    notes: list[str] = []
+    check = _checker(failures, notes, tolerance)
+
+    check("median_update_vs_build_x",
+          float(baseline["median_update_vs_build_x"]),
+          float(fresh["median_update_vs_build_x"]))
+    for cell, b, f in _grid_cells(baseline, fresh, notes):
         if "error" in b or "error" in f:
             # int32-refusal cells carry no numbers; a refusal flipping
             # between records IS worth failing on — the config's
@@ -82,21 +112,57 @@ def compare(baseline: dict, fresh: dict,
     return failures, notes
 
 
+def compare_dist(baseline: dict, fresh: dict,
+                 tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
+                                                                list[str]]:
+    """Dist-suite gate: throughput within the band, partition shape exact."""
+    failures: list[str] = []
+    notes: list[str] = []
+    check = _checker(failures, notes, tolerance)
+    comparable = baseline.get("n_txns") == fresh.get("n_txns")
+
+    for cell, b, f in _grid_cells(baseline, fresh, notes):
+        for metric in DIST_CELL_METRICS:
+            check(f"{cell}.{metric}", float(b[metric]), float(f[metric]))
+        for metric in DIST_STRUCTURAL:
+            if metric not in b or metric not in f:
+                continue
+            if b[metric] != f[metric]:
+                line = (f"{cell}.{metric}: baseline {b[metric]} "
+                        f"fresh {f[metric]} — execute partition changed")
+                if comparable:
+                    failures.append(line)
+                else:
+                    notes.append(line + "  (different n_txns, not gated)")
+            else:
+                notes.append(f"{cell}.{metric}: {f[metric]} (exact)")
+    return failures, notes
+
+
+_SUITES = {"hotpath": compare, "dist": compare_dist}
+
+
 def main(argv: list[str] | None = None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("fresh", help="freshly measured BENCH_hotpath.json "
-                    "(hotpath_bench --out)")
-    ap.add_argument("--baseline", default=bench_path("hotpath"),
-                    help="committed baseline (default: repo-root "
-                    "BENCH_hotpath.json)")
+    ap.add_argument("fresh", help="freshly measured record "
+                    "(hotpath_bench --out / dist_bench --out)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline (default: the repo-root "
+                    "BENCH_<suite>.json matching the fresh record's suite)")
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="fail when fresh is worse by this factor "
                     "(default: %(default)s)")
     args = ap.parse_args(argv)
-    baseline = load_bench(args.baseline, expect_suite="hotpath")
-    fresh = load_bench(args.fresh, expect_suite="hotpath")
-    failures, notes = compare(baseline, fresh, tolerance=args.tolerance)
+    fresh = load_bench(args.fresh)
+    suite = fresh.get("suite")
+    if suite not in _SUITES:
+        sys.exit(f"{args.fresh}: suite {suite!r} has no gate "
+                 f"(known: {sorted(_SUITES)})")
+    baseline = load_bench(args.baseline or bench_path(suite),
+                          expect_suite=suite)
+    failures, notes = _SUITES[suite](baseline, fresh,
+                                     tolerance=args.tolerance)
     for line in notes:
         print("  " + line)
     if failures:
@@ -105,7 +171,7 @@ def main(argv: list[str] | None = None) -> None:
         for line in failures:
             print("  " + line, file=sys.stderr)
         sys.exit(1)
-    print(f"\nperf gate OK: {len(notes)} metrics within "
+    print(f"\nperf gate OK [{suite}]: {len(notes)} metrics within "
           f"{args.tolerance:.0f}x of baseline")
 
 

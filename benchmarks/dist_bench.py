@@ -19,8 +19,18 @@ records end-to-end jitted tps for the dist engine AND the single-device
 ``sharded`` engine on the identical block (the exactness cross-check asserts
 byte-identical snapshots while it is at it).
 
+Execute-phase scaling cells: the execute phase partitions each wave's lanes
+``ceil(window / D)`` per device, so each cell also records
+``lanes_per_device`` and the per-wave ``routed_read_bytes_per_device`` —
+the live routed payload (query out: loc+reader, 8 B; answer back: one
+``ReadResolution``, 14 B; ``max_reads`` read sites per lane).  Bucket
+CAPACITY in the two-hop exchange is provisioned worst-case (window-wide,
+so routing can never overflow); the payload is what shrinks as devices
+grow, and the ``exec_scaling_*`` headlines record exactly that.
+
 Output: ``BENCH_dist.json`` at the repo root (uploaded as a CI artifact by
-the ``test-dist`` job).
+the ``test-dist`` job, which also gates a fresh record against the
+committed baseline via ``benchmarks/check_regression.py``).
 
   PYTHONPATH=src python -m benchmarks.dist_bench --fast
 """
@@ -50,6 +60,22 @@ from repro.launch.mesh import make_mesh        # noqa: E402
 #: Fixed per-device region count: total regions scale with the mesh, local
 #: update work does not — the claim BENCH_dist.json exists to record.
 REGIONS_PER_DEVICE = 4
+
+#: Routed execute-read payload per live lane read: query out (loc + reader,
+#: two i32) + answer back (ReadResolution: found u8, writer/slot/inc i32,
+#: is_estimate u8).
+ROUTED_READ_BYTES = (2 * 4) + (4 * 3 + 2)
+
+
+def exec_lane_stats(cfg, devices: int) -> dict:
+    """Static execute-partition quantities for one cell (pure arithmetic,
+    so the committed record is reproducible byte-for-byte)."""
+    lanes = -(-cfg.window // devices)
+    return {
+        "lanes_per_device": lanes,
+        "routed_read_bytes_per_device": lanes * cfg.max_reads
+        * ROUTED_READ_BYTES,
+    }
 
 
 def _timed_call(fn, *args, inner=1):
@@ -138,9 +164,11 @@ def run_grid(n_txns=512, reps=1):
                 record["grid"][name] = dict(
                     devices=d, n_shards=n_shards, waves=waves,
                     per_wave_ms=ms, tps_dist=dist_tps,
-                    tps_single_device=ref_tps)
+                    tps_single_device=ref_tps,
+                    **exec_lane_stats(dcfg, d))
                 print(f"{name}: update {ms['index']:.3f}ms/wave "
-                      f"(S={n_shards}), exec {ms['execute']:.3f}ms, "
+                      f"(S={n_shards}), exec {ms['execute']:.3f}ms "
+                      f"({-(-dcfg.window // d)} lanes/dev), "
                       f"val {ms['validate']:.3f}ms, snap {ms['snapshot']:.1f}"
                       f"ms  e2e {dist_tps:.0f} tps (1-dev {ref_tps:.0f})")
     # headline: shard-local update cost vs device count at fixed rpd
@@ -152,6 +180,24 @@ def run_grid(n_txns=512, reps=1):
             record[key] = by_d
             record[key + "_max_over_min"] = max(by_d.values()) / \
                 max(min(by_d.values()), 1e-9)
+    # headline: the execute partition scales down with the mesh — lane count
+    # and live routed-read payload per device must strictly decrease (the
+    # wall-clock column is informational: virtual CPU devices serialize, so
+    # per-wave execute time reflects dispatch overhead, not the partition)
+    for n_locs in n_locs_axis:
+        for zipf_s in zipf_axis:
+            cells = {d: record["grid"][f"D{d}_L{n_locs}_z{zipf_s}"]
+                     for d in devices_axis}
+            record[f"exec_scaling_L{n_locs}_z{zipf_s}"] = {
+                d: dict(execute_ms=c["per_wave_ms"]["execute"],
+                        lanes_per_device=c["lanes_per_device"],
+                        routed_read_bytes_per_device=c[
+                            "routed_read_bytes_per_device"])
+                for d, c in cells.items()}
+            bytes_by_d = [cells[d]["routed_read_bytes_per_device"]
+                          for d in devices_axis]
+            assert all(a > b for a, b in zip(bytes_by_d, bytes_by_d[1:])), \
+                f"routed payload must shrink with the mesh: {bytes_by_d}"
     return record
 
 
@@ -164,10 +210,14 @@ def main():
     ap.add_argument("--n-txns", type=int, default=512)
     ap.add_argument("--reps", type=int, default=0,
                     help="0 = auto: 1 rep under --fast, 3 under --full")
+    ap.add_argument("--out", default=None,
+                    help="write the record here instead of the repo-root "
+                    "BENCH_dist.json (CI writes a fresh record next to the "
+                    "committed baseline and gates one against the other)")
     args = ap.parse_args()
     reps = args.reps or (1 if args.fast else 3)
     record = run_grid(n_txns=args.n_txns, reps=reps)
-    print(f"wrote {write_bench('dist', record)}")
+    print(f"wrote {write_bench('dist', record, out=args.out)}")
 
 
 if __name__ == "__main__":

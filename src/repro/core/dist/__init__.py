@@ -14,8 +14,11 @@ in which
 * batched read resolution (validation) is a two-hop routed query — queries
   bucketed by ``region_of(loc)``, ``all_to_all``'d to the owning device,
   answered with the existing segment search, routed back,
-* execution reads resolve against a per-wave ``all_gather``ed index view
-  (reads discovered mid-transaction cannot be pre-routed),
+* the execute phase partitions each wave's lanes ``window/D`` per device;
+  reads discovered mid-transaction cannot be pre-routed, so each per-lane
+  read surfaces as the SAME two-hop routed exchange (a ``custom_vmap``
+  batch rule over the device's lane batch), and one ``ExecResult``
+  ``all_gather`` re-replicates the wave,
 * validation's dirty-region skip consumes the replicated version vector via
   an ``all_gather`` of the ``(n_regions,)`` counters only, and
 * the snapshot is computed per device over its own location span and

@@ -16,10 +16,17 @@ Communication per hook (and nothing else crosses devices):
 * ``build``/``update``   — none.  Each device event-merges only the write
   events that land in its regions; the per-region ``version`` counters live
   with their regions (local ``(regions_per_device,)`` slice).
+* ``execute_routed``     — the wave's lanes are partitioned across the mesh
+  (``ceil(window / D)`` lanes per device; fill lanes pad the tail) and each
+  device executes only its slice.  Execution reads are discovered
+  mid-transaction (pointer indirection) and cannot be pre-routed, so each
+  read surfaces as a per-step routed exchange: a ``custom_vmap`` resolver
+  whose batch rule runs the same two-hop ``all_to_all`` routing as
+  ``resolve_batch`` over the device's lane batch.  One ``ExecResult``
+  ``all_gather`` re-replicates the wave.
 * ``make_resolver``      — ``all_gather`` of keys/packed/starts into a full
-  index view.  Execution reads are discovered mid-transaction (pointer
-  indirection) and cannot be pre-routed, so the wave's execute phase reads a
-  gathered snapshot of the index — the BSP analogue of remote MV reads.
+  index view (the replicated-execution reference path; kept as the routed
+  paths' equivalence oracle, no longer on the engine's wave loop).
 * ``resolve_batch``      — the two-hop routed query: the flat query batch is
   chunked across devices, each device buckets its chunk by the owning device
   (``region_of(loc) // regions_per_device``), ``all_to_all``s the buckets,
@@ -45,6 +52,61 @@ from repro.core.mv.base import (BackendDefaults, ReadResolution,
                                 resolve_value)
 from repro.core.mv.sharded import ShardedBackend, ShardedIndex, select_search
 from repro.core.types import NO_LOC
+
+
+def _routed_read_fn(backend: "DistShardedBackend", w: int):
+    """Per-read routed resolver core: a ``custom_vmap`` over (loc, reader).
+
+    Execution reads surface one scalar call per lane inside the transaction
+    VM (a static DSL call site, or one ``lax.scan`` step of the bytecode
+    interpreter) — always under the executor's lane ``vmap``.  The batch
+    rule therefore sees the device's whole lane batch at once and runs ONE
+    two-hop routed exchange for it (:meth:`DistShardedBackend._route_chunk`,
+    bucket capacity = the lane batch), instead of resolving against a
+    gathered full-index view.  Every argument is passed explicitly (same
+    idiom as ``kernels.mv_region_resolve.ops``): the index/state arrays
+    arrive unbatched, only ``loc``/``reader`` carry the lane axis.
+
+    SPMD alignment: all devices execute the same per-lane program with the
+    same static lane count, so each traced batch-rule site issues exactly
+    one collective on every device (vmapped ``lax.switch``/``cond`` execute
+    all branches under a batched predicate — no device can skip a site).
+    """
+    from jax import custom_batching
+
+    @custom_batching.custom_vmap
+    def routed_read(keys, packed, starts, version, estimate, incarnation,
+                    loc, reader):
+        index = ShardedIndex(keys=keys, packed=packed, starts=starts,
+                             version=version)
+        res = backend._route_chunk(index, estimate, incarnation, w,
+                                   loc[None], reader[None])
+        return jax.tree_util.tree_map(lambda a: a[0], res)
+
+    @routed_read.def_vmap
+    def _batch_rule(axis_size, in_batched, keys, packed, starts, version,
+                    estimate, incarnation, locs, readers):
+        # The MV index/state arrays are lane-INVARIANT (one index serves the
+        # whole wave), but they often arrive batched anyway: a vmapped
+        # ``lax.switch`` (the bytecode ALU dispatch) broadcasts every branch
+        # operand along the lane axis.  Those batched copies are literal
+        # broadcasts, so lane 0 IS the shared array.
+        unb = lambda x, b: x[0] if b else x
+        keys, packed, starts, version, estimate, incarnation = (
+            unb(x, b) for x, b in zip(
+                (keys, packed, starts, version, estimate, incarnation),
+                in_batched[:6]))
+        if not in_batched[6]:
+            locs = jnp.broadcast_to(locs, (axis_size,))
+        if not in_batched[7]:
+            readers = jnp.broadcast_to(readers, (axis_size,))
+        index = ShardedIndex(keys=keys, packed=packed, starts=starts,
+                             version=version)
+        res = backend._route_chunk(index, estimate, incarnation, w,
+                                   locs, readers)
+        return res, jax.tree_util.tree_map(lambda _: True, res)
+
+    return routed_read
 
 
 @dataclasses.dataclass(frozen=True)
@@ -200,30 +262,22 @@ class DistShardedBackend(BackendDefaults):
         return finalize_resolution(found, entry // w, entry % w,
                                    estimate, incarnation)
 
-    def resolve_batch(self, index: ShardedIndex, write_locs: jax.Array,
-                      estimate: jax.Array, incarnation: jax.Array,
-                      locs: jax.Array, readers: jax.Array) -> ReadResolution:
-        """Two-hop routed query (see module docstring).
+    def _route_chunk(self, index: ShardedIndex, estimate: jax.Array,
+                     incarnation: jax.Array, w: int, my_locs: jax.Array,
+                     my_rdrs: jax.Array) -> ReadResolution:
+        """Answer THIS device's ``(qc,)`` query chunk by two-hop routing.
 
-        The replicated ``(Q,)`` batch is chunked evenly across devices; each
-        device routes its chunk's queries to their owning devices and the
-        answered chunks are re-gathered, so both the search work and the
-        answer traffic split D ways.  Bucket capacity equals the chunk size
-        (a device can send at most its whole chunk to one owner), so routing
-        never overflows and needs no fallback path.
+        The shared core of :meth:`resolve_batch` and the execute phase's
+        per-read routed resolver: bucket the chunk by owning device, route
+        with one ``all_to_all``, answer foreign queries against the local
+        segments, route the answers back.  Bucket capacity equals the chunk
+        size (a device can send at most its whole chunk to one owner), so
+        routing never overflows and needs no fallback path.  Returns the
+        chunk's answers in query order.
         """
         D, SL = self.n_devices, self.regions_per_device
         i32 = jnp.int32
-        w = write_locs.shape[1]
-        Q = locs.shape[0]
-        qc = -(-Q // D)                   # chunk (and bucket) capacity
-        pad = qc * D - Q
-        if pad:
-            locs = jnp.concatenate([locs, jnp.full((pad,), NO_LOC, i32)])
-            readers = jnp.concatenate([readers, jnp.zeros((pad,), i32)])
-        me = jax.lax.axis_index(AXIS)
-        my_locs = jax.lax.dynamic_slice_in_dim(locs, me * qc, qc)
-        my_rdrs = jax.lax.dynamic_slice_in_dim(readers, me * qc, qc)
+        qc = my_locs.shape[0]
 
         # Bucket by owning device; rank within bucket = stable order of the
         # chunk (sort-based cumcount, same group trick as sharded.update).
@@ -245,11 +299,98 @@ class DistShardedBackend(BackendDefaults):
         res = self._answer_local(index, recv_locs, recv_rdrs, estimate,
                                  incarnation, w)
         # Route answers back and unpermute: my query i's answer sits at
-        # back[owner[i]*qc + rank[i]]; then re-gather the chunks.
-        back = jax.tree_util.tree_map(lambda a: a2a(a).reshape(-1)[slot], res)
-        full = jax.tree_util.tree_map(
+        # back[owner[i]*qc + rank[i]].
+        return jax.tree_util.tree_map(lambda a: a2a(a).reshape(-1)[slot], res)
+
+    def resolve_batch(self, index: ShardedIndex, write_locs: jax.Array,
+                      estimate: jax.Array, incarnation: jax.Array,
+                      locs: jax.Array, readers: jax.Array) -> ReadResolution:
+        """Two-hop routed query (see module docstring).
+
+        The replicated ``(Q,)`` batch is chunked evenly across devices; each
+        device routes its chunk's queries to their owning devices
+        (:meth:`_route_chunk`) and the answered chunks are re-gathered, so
+        both the search work and the answer traffic split D ways.
+        """
+        D = self.n_devices
+        i32 = jnp.int32
+        w = write_locs.shape[1]
+        Q = locs.shape[0]
+        qc = -(-Q // D)                   # chunk (and bucket) capacity
+        pad = qc * D - Q
+        if pad:
+            locs = jnp.concatenate([locs, jnp.full((pad,), NO_LOC, i32)])
+            readers = jnp.concatenate([readers, jnp.zeros((pad,), i32)])
+        me = jax.lax.axis_index(AXIS)
+        my_locs = jax.lax.dynamic_slice_in_dim(locs, me * qc, qc)
+        my_rdrs = jax.lax.dynamic_slice_in_dim(readers, me * qc, qc)
+        back = self._route_chunk(index, estimate, incarnation, w,
+                                 my_locs, my_rdrs)
+        return jax.tree_util.tree_map(
             lambda a: jax.lax.all_gather(a, AXIS).reshape(-1)[:Q], back)
-        return full
+
+    def make_routed_resolver(self, index: ShardedIndex,
+                             write_locs: jax.Array, estimate: jax.Array,
+                             incarnation: jax.Array):
+        """Scalar resolver whose lane-vmapped calls route, not gather.
+
+        Same ``resolver(loc, reader)`` contract as :meth:`make_resolver`
+        and byte-identical answers (both end in the same per-segment
+        search), but the communication pattern is the two-hop routed
+        exchange of :func:`_routed_read_fn` — per-device traffic scales
+        with the device's lane count, not with the index.
+        """
+        routed = _routed_read_fn(self, write_locs.shape[1])
+
+        def resolver(loc, reader):
+            return routed(index.keys, index.packed, index.starts,
+                          index.version, estimate, incarnation, loc, reader)
+
+        return resolver
+
+    def _my_lane_slice(self, active_ids: jax.Array) -> jax.Array:
+        """This device's ``ceil(window/D)`` slice of the wave's lanes.
+
+        The wave is padded with fill lanes (txn id ``n_txns``) to a
+        D-divisible width, so every device executes the same static lane
+        count — a device whose slice is all fill lanes still participates
+        in every routed exchange (SPMD alignment).
+        """
+        D = self.n_devices
+        win = active_ids.shape[0]
+        lpd = -(-win // D)
+        pad = lpd * D - win
+        ids = active_ids
+        if pad:
+            ids = jnp.concatenate(
+                [ids, jnp.full((pad,), self.n_txns, jnp.int32)])
+        me = jax.lax.axis_index(AXIS)
+        return jax.lax.dynamic_slice_in_dim(ids, me * lpd, lpd)
+
+    def execute_routed(self, index: ShardedIndex, write_locs: jax.Array,
+                       estimate: jax.Array, incarnation: jax.Array,
+                       active_ids: jax.Array, exec_fn):
+        """Partitioned wave execution (see module docstring).
+
+        Each device runs ``exec_fn`` over only its lane slice, reading
+        through the routed per-read resolver; one ``all_gather`` re-
+        replicates the wave's ``ExecResult`` lanes in preset order.  Exact
+        by construction: the lane -> txn assignment is the replicated
+        schedule, the routed answers are byte-identical to the local
+        resolver's (same segments, same search), and fill/pad lanes beyond
+        ``window`` are sliced off after the gather — so the gathered result
+        is byte-identical to every device executing the full wave.
+        """
+        D = self.n_devices
+        win = active_ids.shape[0]
+        lpd = -(-win // D)
+        my_ids = self._my_lane_slice(active_ids)
+        resolver = self.make_routed_resolver(index, write_locs, estimate,
+                                             incarnation)
+        local = exec_fn(resolver, my_ids)
+        gather = lambda a: jax.lax.all_gather(a, AXIS).reshape(
+            (D * lpd,) + a.shape[1:])[:win]
+        return jax.tree_util.tree_map(gather, local)
 
     def snapshot(self, index: ShardedIndex, write_locs: jax.Array,
                  estimate: jax.Array, incarnation: jax.Array,
@@ -307,3 +448,11 @@ class DistShardedBackend(BackendDefaults):
         me = jax.lax.axis_index(AXIS)
         return jax.lax.dynamic_slice_in_dim(d, me * SL, SL).sum(
             dtype=jnp.int32)
+
+    def trace_exec_lanes(self, active_ids: jax.Array,
+                         active_mask: jax.Array) -> jax.Array:
+        """Live lanes THIS device executed — its slice of the partitioned
+        wave (:meth:`execute_routed`'s padding and slicing arithmetic), so
+        the merged ``(D, cap)`` buffer is the execute-phase load balance."""
+        return (self._my_lane_slice(active_ids)
+                < self.n_txns).sum(dtype=jnp.int32)

@@ -14,7 +14,10 @@ the collectives each phase needs:
 =================  =====================================================
 phase              communication
 =================  =====================================================
-execute            ``all_gather`` index view (+ ``(S,)`` version counters)
+execute            lanes partitioned ``window/D`` per device; per-read
+                   two-hop routed ``all_to_all`` exchange + one
+                   ``ExecResult`` ``all_gather`` (+ ``(S,)`` version
+                   counters under the dirty-validation skip)
 index (update)     none — shard-local event merge
 validate           two-hop routed ``all_to_all`` resolve + ``(S,)`` versions
 snapshot           span-local reads + one value ``all_gather``

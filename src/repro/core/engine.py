@@ -113,17 +113,6 @@ def _select_wave(state: EngineState, cfg: EngineConfig) -> tuple[jax.Array, jax.
     return active_ids.astype(jnp.int32), active_mask
 
 
-def _make_resolver(state: EngineState, cfg: EngineConfig):
-    """Read-resolution closure for the current MV state (backend-selected).
-
-    Every backend (sorted / dense / sharded) is consumed through the
-    :class:`~repro.core.mv.base.MVBackend` protocol: the engine never touches
-    index layout, only ``state.index`` as an opaque pytree.
-    """
-    return mv.make_backend(cfg).make_resolver(
-        state.index, state.write_locs, state.estimate, state.incarnation)
-
-
 def _execute_wave(state: EngineState, active_ids: jax.Array,
                   program: TxnProgram, params: Any, storage: jax.Array,
                   cfg: EngineConfig) -> ExecResult:
@@ -135,10 +124,19 @@ def _execute_wave(state: EngineState, active_ids: jax.Array,
     :func:`repro.core.executor.execute_txns`), which the Bohm/LiTM baselines
     use as well — one code path executes DSL and heterogeneous bytecode
     blocks under every engine.
+
+    WHERE the lanes execute is the backend's ``execute_routed`` placement
+    hook: single-device backends run every lane here against their plain
+    resolver; the dist backend partitions the lanes across the region mesh
+    and re-replicates the result (:mod:`repro.core.dist.backend`).
     """
-    resolver = _make_resolver(state, cfg)
-    return executor.execute_txns(program, params, storage, cfg, resolver,
-                                 state.write_vals, active_ids)
+    def exec_fn(resolver, ids):
+        return executor.execute_txns(program, params, storage, cfg, resolver,
+                                     state.write_vals, ids)
+
+    return mv.make_backend(cfg).execute_routed(
+        state.index, state.write_locs, state.estimate, state.incarnation,
+        active_ids, exec_fn)
 
 
 def _apply_results(state: EngineState, active_ids: jax.Array,
@@ -262,7 +260,11 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
         # A capacity covering every row can never narrow the work: the cond
         # predicate would always take the gather path, paying its
         # nonzero/gather/scatter machinery on top of full-width validation.
-        return full_path(None), aux(jnp.asarray(True))
+        # This is the cap DISABLED, not the cap overflowing — report
+        # fallback=False so small blocks don't show a 100% cap-fallback
+        # rate in the wave trace (lane accounting is unaffected: k == n
+        # here since dirty_cap() is clamped to n_txns, so k*r == n*r).
+        return full_path(None), aux(jnp.asarray(False))
 
     def gather_path(_):
         (rows,) = jnp.nonzero(need, size=k, fill_value=n)
@@ -416,7 +418,8 @@ def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
     if cfg.trace_level:
         new_state = new_state._replace(trace=obs.record_execute(
             new_state.trace, state.wave, active_ids, active_mask,
-            success, active_mask & res.blocked, res))
+            success, active_mask & res.blocked, res,
+            mv.make_backend(cfg).trace_exec_lanes(active_ids, active_mask)))
     return new_state, delta
 
 

@@ -52,6 +52,12 @@ def execute_txns(program: TxnProgram, params: Any, storage: jax.Array,
     the caller masks.  ``txn_ids=None`` executes the whole block without
     gathering the params pytree (the baselines call this every round — the
     gather would be an identity copy of every array, code tensors included).
+
+    ``txn_ids`` may be any length — under the dist engine each device calls
+    this with its ``ceil(window/D)`` lane slice of the wave (padded with fill
+    lanes), reading through the backend's routed resolver; the garbage the
+    fill lanes produce is a pure function of the id, so every device's pad
+    lanes compute identically and the post-gather slice stays deterministic.
     """
     def value_reader(res, loc):
         return mv.resolve_value(write_vals, storage, res, loc)

@@ -29,7 +29,7 @@ This module pins down that seam.  A backend is an object with three methods:
   ReadResolution``, a scalar function the engine vmaps over reads, read-set
   validation rows, and the final snapshot.
 
-Backends additionally expose four *batched/placement* hooks with protocol-
+Backends additionally expose *batched/placement* hooks with protocol-
 level defaults (:class:`BackendDefaults`), which is what lets the
 multi-device backend (:mod:`repro.core.dist`) change data placement without
 the engine caring:
@@ -39,6 +39,15 @@ the engine caring:
   resolver (which is also how the ``resolver_impl='pallas'`` kernel batches);
   the dist backend instead routes each query to the device owning its region
   (two-hop ``all_to_all``) and gathers the answers.
+* ``execute_routed(index, write_locs, estimate, incarnation, active_ids,
+  exec_fn)`` — run the wave's execute phase under this backend's placement.
+  ``exec_fn(resolver, ids)`` is the engine's VM closure (vmapped speculative
+  execution of the ``ids`` lanes reading through ``resolver``).  Default:
+  identity — every lane executes here against ``make_resolver``.  The dist
+  backend partitions the lanes across the mesh, executes each device's
+  slice against a *routed* per-read resolver (mid-transaction reads travel
+  the same two-hop ``all_to_all`` as ``resolve_batch``), and ``all_gather``s
+  the :class:`~repro.core.types.ExecResult` lanes back replicated.
 * ``snapshot(index, write_locs, estimate, incarnation, write_vals, storage,
   n_locs)`` — MVMemory.snapshot (paper L55-61) as one batched read of every
   location by reader ``n_txns``.  Default: ``resolve_batch`` + value gather;
@@ -145,6 +154,16 @@ class MVBackend(Protocol):
         """Resolve a flat ``(Q,)`` batch of reads (see module docstring)."""
         ...
 
+    def execute_routed(self, index: Any, write_locs: jax.Array,
+                       estimate: jax.Array, incarnation: jax.Array,
+                       active_ids: jax.Array, exec_fn: Callable) -> Any:
+        """Run ``exec_fn(resolver, ids)`` under this backend's placement.
+
+        Returns the full wave's :class:`~repro.core.types.ExecResult` with
+        one lane per entry of ``active_ids`` (see module docstring).
+        """
+        ...
+
     def snapshot(self, index: Any, write_locs: jax.Array, estimate: jax.Array,
                  incarnation: jax.Array, write_vals: jax.Array,
                  storage: jax.Array, n_locs: int) -> jax.Array:
@@ -183,6 +202,13 @@ class BackendDefaults:
                                       incarnation)
         return jax.vmap(resolver)(locs, readers)
 
+    def execute_routed(self, index, write_locs, estimate, incarnation,
+                       active_ids, exec_fn):
+        # Single-device identity: every lane executes here, reading through
+        # the plain scalar resolver.
+        return exec_fn(self.make_resolver(index, write_locs, estimate,
+                                          incarnation), active_ids)
+
     def snapshot(self, index, write_locs, estimate, incarnation, write_vals,
                  storage, n_locs) -> jax.Array:
         locs = jnp.arange(n_locs, dtype=jnp.int32)
@@ -213,6 +239,16 @@ class BackendDefaults:
         ``(D, cap)`` buffer shows where the write traffic actually landed.
         """
         return dirty.sum(dtype=jnp.int32)
+
+    def trace_exec_lanes(self, active_ids, active_mask) -> jax.Array:
+        """() i32 live lanes THIS view executed in the wave (telemetry).
+
+        Single-device backends execute every live lane; the dist backend
+        counts only the live lanes of its own slice of the partitioned wave
+        (:meth:`execute_routed`) — the merged ``(D, cap)`` buffer is the
+        execute-phase load-balance view.
+        """
+        return active_mask.sum(dtype=jnp.int32)
 
 
 def dirty_from_delta(n_regions: int, region_of, old_write_locs: jax.Array,

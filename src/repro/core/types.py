@@ -79,6 +79,28 @@ class EngineConfig:
                                  # .trace and returns in BlockResult.trace.
 
     def __post_init__(self):
+        # Shape sanity first: a nonsense extent would otherwise surface much
+        # later as an opaque XLA shape error (or a silent zero-progress
+        # while_loop running to waves_cap).
+        if self.n_txns <= 0:
+            raise ValueError(f"n_txns={self.n_txns}: a block must contain at "
+                             f"least one transaction")
+        if self.n_locs <= 0:
+            raise ValueError(f"n_locs={self.n_locs}: the location universe "
+                             f"must be non-empty")
+        if self.max_reads <= 0 or self.max_writes <= 0:
+            raise ValueError(
+                f"max_reads={self.max_reads}, max_writes={self.max_writes}: "
+                f"the per-incarnation read/write slot bounds must be "
+                f"positive (a zero-slot VM cannot record any access)")
+        if self.window <= 0:
+            raise ValueError(f"window={self.window}: the wave needs at least "
+                             f"one lane (virtual thread)")
+        if self.validation_window < 0:
+            raise ValueError(
+                f"validation_window={self.validation_window}: expected 0 "
+                f"(validate all executed txns per wave) or a positive sweep "
+                f"width")
         if self.backend not in ("sorted", "dense", "sharded"):
             raise ValueError(f"unknown MV backend {self.backend!r}; expected "
                              f"'sorted', 'dense', or 'sharded'")

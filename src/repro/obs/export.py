@@ -34,7 +34,7 @@ import numpy as np
 from repro.obs.trace import NO_TXN, WaveTrace
 
 #: Schema tag stamped into every serialized trace (bump on layout change).
-SCHEMA = "blockstm-wave-trace/v1"
+SCHEMA = "blockstm-wave-trace/v2"
 
 #: The scalar counter fields, in serialization order.
 COUNTER_FIELDS = ("frontier", "wave_size", "execs", "dep_aborts",
@@ -43,7 +43,7 @@ COUNTER_FIELDS = ("frontier", "wave_size", "execs", "dep_aborts",
 
 #: Per-device fields — ``(cap,)`` single-device, ``(D, cap)`` after the
 #: dist merge; serialized with an explicit device axis either way.
-DEVICE_FIELDS = ("dirty_regions", "mv_entries")
+DEVICE_FIELDS = ("dirty_regions", "mv_entries", "exec_lanes")
 
 PHASES = ("execute", "index", "validate")
 

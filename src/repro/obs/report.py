@@ -67,6 +67,12 @@ def summary(d: Mapping) -> str:
             f"devices={dev} final mv entries/device "
             f"min={int(tot.min())} max={int(tot.max())} "
             f"imbalance={tot.max() / max(tot.min(), 1):.2f}x")
+        lanes = np.asarray(d["exec_lanes"])[:, :waves]  # (D, waves)
+        per_dev = lanes.sum(axis=1)
+        lines.append(
+            f"exec lanes/device min={int(per_dev.min())} "
+            f"max={int(per_dev.max())} "
+            f"(wave partition; total={int(per_dev.sum())})")
     return "\n".join(lines)
 
 

@@ -13,7 +13,7 @@ its phase functions:
 hook               fields written (at index ``state.wave``)
 =================  ========================================================
 :func:`record_execute`   wave_size, execs, dep_aborts, exec_reads,
-                         blocked_ids / blockers (level 2)
+                         exec_lanes, blocked_ids / blockers (level 2)
 :func:`record_index`     dirty_regions, mv_entries
 :func:`record_validate`  val_aborts, val_reads, skip_hits, skip_misses,
                          skip_fallback, frontier
@@ -32,9 +32,10 @@ Cost model — ``EngineConfig.trace_level`` is STATIC:
 
 Multi-device (``cfg.dist``): every field derived from the replicated
 scheduler state (sizes, aborts, frontier, read counts) is bit-identical on
-all devices and travels replicated; ``mv_entries`` and ``dirty_regions``
-are *per-device* quantities (each device's LOCAL index occupancy / locally
-dirtied regions), and :func:`merge_device_traces` folds them into
+all devices and travels replicated; ``mv_entries``, ``dirty_regions``, and
+``exec_lanes`` are *per-device* quantities (each device's LOCAL index
+occupancy / locally dirtied regions / executed lane slice of the
+partitioned wave), and :func:`merge_device_traces` folds them into
 ``(n_devices, cap)`` buffers with ONE ``all_gather`` as the block exits the
 ``shard_map`` — the load-balance view a Zipfian region skew shows up in.
 
@@ -91,6 +92,10 @@ class WaveTrace(NamedTuple):
     mv_entries: jax.Array     # (cap,) i32 live MV index entries after the
                               #   index phase ((D, cap) local per-device
                               #   after dist merge)
+    exec_lanes: jax.Array     # (cap,) i32 live lanes THIS view executed
+                              #   (single-device: == wave_size; (D, cap)
+                              #   per-device lane-partition slice sizes
+                              #   after dist merge)
     # -- level >= 2: abort attribution edges --------------------------------
     blocked_ids: Any = None   # (cap, win) i32 txn ids dep-aborted this wave,
                               #   NO_TXN on non-blocked lanes
@@ -109,7 +114,7 @@ def init_trace(cfg) -> WaveTrace | None:
         dep_aborts=count(), val_aborts=count(), exec_reads=count(),
         val_reads=count(), skip_hits=count(), skip_misses=count(),
         skip_fallback=jnp.zeros((cap,), jnp.bool_),
-        dirty_regions=count(), mv_entries=count())
+        dirty_regions=count(), mv_entries=count(), exec_lanes=count())
     if cfg.trace_level >= 2:
         edges = jnp.full((cap, cfg.window), NO_TXN, jnp.int32)
         tr = tr._replace(blocked_ids=edges, blockers=edges)
@@ -122,13 +127,15 @@ def _i32sum(mask: jax.Array) -> jax.Array:
 
 def record_execute(trace: WaveTrace, wave: jax.Array, active_ids: jax.Array,
                    active_mask: jax.Array, success: jax.Array,
-                   blocked: jax.Array, res) -> WaveTrace:
+                   blocked: jax.Array, res, exec_lanes: jax.Array) -> WaveTrace:
     """Execute-phase counters + (level 2) the wave's dep-abort edges.
 
     ``res`` is the wave's :class:`~repro.core.types.ExecResult`;
     ``success``/``blocked`` partition ``active_mask`` (a lane either
     finishes or hits an ESTIMATE), which is the per-wave decomposition of
-    ``BlockStats.execs``/``dep_aborts``.
+    ``BlockStats.execs``/``dep_aborts``.  ``exec_lanes`` is the backend's
+    ``trace_exec_lanes`` — the live lanes THIS view executed (per-device
+    under the dist backend's lane partition).
     """
     w = wave
     live_reads = (res.read_locs != NO_LOC) & active_mask[:, None]
@@ -136,7 +143,8 @@ def record_execute(trace: WaveTrace, wave: jax.Array, active_ids: jax.Array,
         wave_size=trace.wave_size.at[w].set(_i32sum(active_mask)),
         execs=trace.execs.at[w].set(_i32sum(success)),
         dep_aborts=trace.dep_aborts.at[w].set(_i32sum(blocked)),
-        exec_reads=trace.exec_reads.at[w].set(_i32sum(live_reads)))
+        exec_reads=trace.exec_reads.at[w].set(_i32sum(live_reads)),
+        exec_lanes=trace.exec_lanes.at[w].set(exec_lanes))
     if trace.blocked_ids is not None:
         trace = trace._replace(
             blocked_ids=trace.blocked_ids.at[w].set(
@@ -185,14 +193,16 @@ def record_validate(trace: WaveTrace, wave: jax.Array, fail: jax.Array,
 def merge_device_traces(trace: WaveTrace, axis_name: str) -> WaveTrace:
     """Fold per-device buffers into the global trace (dist engine exit).
 
-    Called INSIDE the ``shard_map`` after the engine loop: stacks the two
+    Called INSIDE the ``shard_map`` after the engine loop: stacks the three
     genuinely per-device fields and ``all_gather``s them once along the
     mesh axis, turning their ``(cap,)`` local buffers into ``(D, cap)``
     per-device views (replicated, like every other output of the dist
     engine).  All remaining fields are functions of the replicated
     scheduler state and pass through unchanged.
     """
-    local = jnp.stack([trace.dirty_regions, trace.mv_entries])   # (2, cap)
-    gathered = jax.lax.all_gather(local, axis_name)              # (D, 2, cap)
+    local = jnp.stack([trace.dirty_regions, trace.mv_entries,
+                       trace.exec_lanes])                        # (3, cap)
+    gathered = jax.lax.all_gather(local, axis_name)              # (D, 3, cap)
     return trace._replace(dirty_regions=gathered[:, 0],
-                          mv_entries=gathered[:, 1])
+                          mv_entries=gathered[:, 1],
+                          exec_lanes=gathered[:, 2])

@@ -82,6 +82,26 @@ def test_dist_suite_under_virtual_mesh():
 # Config validation + generic mesh construction (device-count independent)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("kw,match", [
+    (dict(n_txns=0), "n_txns"),
+    (dict(n_txns=-3), "n_txns"),
+    (dict(n_locs=0), "n_locs"),
+    (dict(max_reads=0), "max_reads"),
+    (dict(max_writes=0), "max_writes"),
+    (dict(window=0), "window"),
+    (dict(window=-2), "window"),
+    (dict(validation_window=-1), "validation_window"),
+])
+def test_config_rejects_nonsense_shapes(kw, match):
+    """Degenerate extents must refuse at construction with a named error,
+    not surface later as an opaque XLA shape failure (or a zero-progress
+    while_loop running to the wave cap)."""
+    base = dict(n_txns=8, n_locs=64, max_reads=4, max_writes=4)
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        EngineConfig(**base)
+
+
 def test_config_rejects_dist_without_sharded_backend():
     with pytest.raises(ValueError, match="sharded"):
         EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
@@ -269,6 +289,103 @@ def test_dist_zero_recompiles_across_mixes_on_fixed_mesh():
             np.asarray(res.snapshot),
             run_sequential(vm, params, storage, 32))
     assert run._cache_size() == 1, run._cache_size()
+
+
+# ---------------------------------------------------------------------------
+# Execute-lane partition: windows that don't divide D, starved devices
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16), window=st.sampled_from([5, 7]))
+def test_dist_execute_partition_non_dividing_window(seed, window):
+    """window % n_devices != 0: the lane partition pads to ceil(window/D)*D
+    with fill lanes (id n) and the trailing pad is sliced off after the
+    ExecResult all_gather — snapshot and stats stay byte-identical."""
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), 24, seed=seed, window=window, backend="sharded",
+        n_shards=6)
+    ref = run_block(vm, params, storage, cfg)
+    assert bool(ref.committed)
+    for d in (1, 2, 8):
+        res = run_block(vm, params, storage,
+                        dataclasses.replace(cfg, dist=True,
+                                            mesh=make_mesh("regions", (d,))))
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot),
+                                      err_msg=f"D={d} window={window}")
+        assert _stats(res) == _stats(ref), (d, _stats(res), _stats(ref))
+
+
+@needs_mesh
+def test_dist_execute_partition_starved_devices():
+    """A 6-txn block with window=8 on 8 devices gives every device ONE lane
+    and leaves >= 2 devices holding only fill lanes (id n) on the very first
+    wave — and most devices fill-only in later waves as the frontier drains.
+    Fill lanes must execute as inert no-ops on their device: same snapshot,
+    same stats, and exec-lane telemetry that sums to the live wave sizes."""
+    vm, params, storage, cfg = W.make_mixed_block(
+        _contended_spec("high"), 6, seed=2, window=8, backend="sharded",
+        n_shards=4, trace_level=1)
+    ref = run_block(vm, params, storage, cfg)
+    assert bool(ref.committed)
+    for d in (1, 2, 8):
+        res = run_block(vm, params, storage,
+                        dataclasses.replace(cfg, dist=True,
+                                            mesh=make_mesh("regions", (d,))))
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot),
+                                      err_msg=f"D={d}")
+        assert _stats(res) == _stats(ref), (d, _stats(res), _stats(ref))
+        # the per-device exec-lane counters partition each wave exactly
+        waves = int(res.waves)
+        lanes = np.asarray(res.trace.exec_lanes)  # (D, cap)
+        assert lanes.shape[0] == d
+        np.testing.assert_array_equal(
+            lanes[:, :waves].sum(axis=0),
+            np.asarray(ref.trace.exec_lanes)[:waves], err_msg=f"D={d}")
+
+
+# ---------------------------------------------------------------------------
+# Chains: run_chain's scan composes with the dist engine's collectives
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_dist_chain_matches_single_device():
+    """A 3-block chain scanned through run_block_dist: every block's
+    snapshot feeds the next, byte-identical to the single-device chain on
+    1/2/8-device meshes, traced and untraced, eager and jitted."""
+    from repro.core.engine import run_chain
+    n_txns, n_blocks = 16, 3
+    vm, params0, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, window=8, backend="sharded",
+        n_shards=4)
+    blocks = []
+    for b in range(n_blocks):
+        _, p, _, _ = W.make_mixed_block(W.MixedSpec(), n_txns, seed=40 + b,
+                                        window=8, backend="sharded",
+                                        n_shards=4)
+        blocks.append(p)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+    final_ref, stats_ref = run_chain(vm, stacked, storage, cfg)
+    assert bool(np.asarray(stats_ref.committed).all())
+    # trace_level=1 exercises the merge-collective-inside-scan composition
+    # on one mesh; the untraced chain runs on every mesh size
+    for d, tl in ((1, 0), (2, 0), (2, 1), (8, 0)):
+        dcfg = dataclasses.replace(cfg, dist=True, trace_level=tl,
+                                   mesh=make_mesh("regions", (d,)))
+        final_d, stats_d = jax.jit(
+            lambda bp, st, c=dcfg: run_chain(vm, bp, st, c))(stacked,
+                                                             storage)
+        np.testing.assert_array_equal(np.asarray(final_d),
+                                      np.asarray(final_ref),
+                                      err_msg=f"D={d} tl={tl}")
+        for f in STATS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(stats_d, f)),
+                np.asarray(getattr(stats_ref, f)),
+                err_msg=f"D={d} tl={tl} {f}")
 
 
 @needs_mesh

@@ -145,6 +145,8 @@ def _check_invariants(res, n_txns):
     fr = np.asarray(t.frontier)[:w]
     assert (np.diff(fr) >= 0).all(), "frontier must be monotone"
     assert fr[-1] == n_txns and bool(res.committed)
+    # single device: every live lane executes here
+    np.testing.assert_array_equal(np.asarray(t.exec_lanes)[:w], ws[:w])
     # unreached waves stay at init values
     assert (ws[w:] == 0).all() and (fr[w:] == 0).all()
     # reads issued only on waves that executed something
@@ -192,6 +194,33 @@ def test_trace_invariants_across_engine_variants():
             assert (np.asarray(res.trace.skip_hits)[:w] == 0).all()
 
 
+def test_degenerate_dirty_cap_is_not_a_fallback():
+    """Regression: when ``dirty_cap() >= n_txns`` the cap cannot narrow the
+    work, so ``_validate_dirty`` takes its full-width early return — that is
+    the cap DISABLED, not the cap overflowing.  It used to stamp
+    ``skip_fallback=True`` on every wave, making small blocks report a 100%
+    cap-fallback rate; it must report False, with skip-hit/miss lane
+    accounting intact."""
+    vm, params, storage, cfg = _block(backend="sharded", trace_level=1)
+    assert cfg.dirty_cap() >= cfg.n_txns, "fixture must hit the degenerate cap"
+    res = run_block(vm, params, storage, cfg)
+    w = int(res.waves)
+    t = res.trace
+    assert not np.asarray(t.skip_fallback)[:w].any(), \
+        "degenerate cap reported as fallback"
+    # lane accounting unaffected: hits+misses still cover the skip decisions
+    hits = np.asarray(t.skip_hits)[:w]
+    misses = np.asarray(t.skip_misses)[:w]
+    assert (hits + misses > 0).any()
+    assert (hits >= 0).all() and (misses >= 0).all()
+    # a cap that genuinely CAN overflow still reports fallback when it does
+    c2 = dataclasses.replace(cfg, dirty_validation_cap=2)
+    assert c2.dirty_cap() < c2.n_txns
+    r2 = run_block(vm, params, storage, c2)
+    assert np.asarray(r2.trace.skip_fallback)[:int(r2.waves)].any(), \
+        "cap-2 run never overflowed — fixture too tame for the contrast leg"
+
+
 # ---------------------------------------------------------------------------
 # Dist engine: replicated fields identical, per-device fields sum exactly
 # ---------------------------------------------------------------------------
@@ -220,7 +249,7 @@ def test_dist_trace_matches_single_device():
                 np.asarray(getattr(res.trace, f)),
                 np.asarray(getattr(ref.trace, f)), err_msg=f"D={d} {f}")
         # per-device views: (D, cap), summing to the single-device counts
-        for f in ("mv_entries", "dirty_regions"):
+        for f in ("mv_entries", "dirty_regions", "exec_lanes"):
             a = np.asarray(getattr(res.trace, f))
             assert a.shape == (d, cfg.waves_cap()), (f, a.shape)
             np.testing.assert_array_equal(
