@@ -1,9 +1,10 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
-.PHONY: test test-fast test-dist bench-smoke bench bench-baselines \
-	bench-shards bench-hotpath bench-dist profile report check-regression \
-	check-regression-dist
+.PHONY: test test-fast test-dist test-guard bench-smoke bench \
+	bench-baselines bench-shards bench-hotpath bench-dist bench-guard \
+	profile report check-regression check-regression-dist \
+	check-regression-guard
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,6 +21,14 @@ test-dist:
 	REPRO_FAST_EXAMPLES=2 JAX_PLATFORMS=cpu \
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -x -q tests/test_dist.py
+
+# Chaos / guard / degradation property suite directly on the 8-device mesh
+# (same flag contract as test-dist; plain `make test` covers it through
+# tests/test_guard.py's subprocess runner instead).
+test-guard:
+	REPRO_FAST_EXAMPLES=2 JAX_PLATFORMS=cpu \
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PY) -m pytest -x -q tests/test_guard.py
 
 # Fast perf record: mixed-contract bytecode block through one jitted executor.
 bench-smoke:
@@ -46,6 +55,12 @@ bench-hotpath:
 # artifact).  Forces its own 8-device host platform before importing jax.
 bench-dist:
 	PYTHONPATH=src $(PY) -m benchmarks.dist_bench --fast
+
+# Guard/chaos overhead on the mirrored hotpath cell: guard levels 0/1/2,
+# a full chaos schedule, and the sequential degradation fallback
+# -> BENCH_guard.json (cross-gated against BENCH_hotpath.json).
+bench-guard:
+	PYTHONPATH=src $(PY) -m benchmarks.guard_bench --fast
 
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast
@@ -77,3 +92,11 @@ check-regression-dist:
 		--out BENCH_dist.fresh.json
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
 		BENCH_dist.fresh.json
+
+# Guard gate: fresh guard record vs the committed BENCH_guard.json, plus
+# the tps_guard0 cross-check against the committed hotpath cell.
+check-regression-guard:
+	PYTHONPATH=src $(PY) -m benchmarks.guard_bench --fast \
+		--out BENCH_guard.fresh.json
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
+		BENCH_guard.fresh.json

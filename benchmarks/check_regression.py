@@ -29,6 +29,13 @@ plus the structural execute-partition quantities (``lanes_per_device``,
 so at equal block size any drift is a partition change, which fails the
 gate outright.
 
+``guard`` records (``guard_bench --out``) check every variant's
+throughput (``tps_guard{0,1,2}`` / ``tps_chaos`` / ``tps_degraded``)
+against the committed guard baseline, and additionally cross-gate
+``tps_guard0`` against the committed hotpath baseline's mirrored grid
+cell — the default path must not quietly pay for the robustness
+machinery.
+
 Cells present in only one record (grid drift) are reported but never fail
 the gate.  Both records must carry the emitter's current ``schema_rev``
 (``benchmarks/_emit.py``) — incomparable layouts refuse loudly instead
@@ -55,6 +62,10 @@ DIST_CELL_METRICS = ("tps_dist", "tps_single_device")
 
 #: Per-cell exact structural quantities of the dist execute partition.
 DIST_STRUCTURAL = ("lanes_per_device", "routed_read_bytes_per_device")
+
+#: Guard-suite higher-is-better metrics (benchmarks/guard_bench.py).
+GUARD_METRICS = ("tps_guard0", "tps_guard1", "tps_guard2", "tps_chaos",
+                 "tps_degraded")
 
 
 def _checker(failures: list[str], notes: list[str], tolerance: float):
@@ -139,7 +150,43 @@ def compare_dist(baseline: dict, fresh: dict,
     return failures, notes
 
 
-_SUITES = {"hotpath": compare, "dist": compare_dist}
+def compare_guard(baseline: dict, fresh: dict,
+                  tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
+                                                                 list[str]]:
+    """Guard-suite gate: every variant's throughput within the band, PLUS
+    the cross-gate against the committed hotpath baseline — the
+    ``guard_level=0 / chaos=None`` number is measured on the same block as
+    one ``BENCH_hotpath.json`` grid cell (``guard_bench.CELL``), so the
+    robustness machinery landing a hidden tax on the default path shows
+    up here even before the guard baseline itself is regenerated."""
+    failures: list[str] = []
+    notes: list[str] = []
+    check = _checker(failures, notes, tolerance)
+
+    for metric in GUARD_METRICS:
+        if metric in baseline and metric in fresh:
+            check(metric, float(baseline[metric]), float(fresh[metric]))
+
+    cell = fresh.get("cell")
+    try:
+        hotpath = load_bench(bench_path("hotpath"), expect_suite="hotpath")
+    except (OSError, ValueError) as e:
+        notes.append(f"hotpath cross-gate skipped: {e}")
+        return failures, notes
+    hcell = hotpath.get("grid", {}).get(cell, {})
+    if hotpath.get("n_txns") != fresh.get("n_txns"):
+        notes.append(f"hotpath cross-gate skipped: n_txns "
+                     f"{hotpath.get('n_txns')} != {fresh.get('n_txns')}")
+    elif "tps_incremental" not in hcell:
+        notes.append(f"hotpath cross-gate skipped: no cell {cell!r} in the "
+                     f"committed BENCH_hotpath.json")
+    else:
+        check(f"hotpath:{cell}.tps_incremental vs tps_guard0",
+              float(hcell["tps_incremental"]), float(fresh["tps_guard0"]))
+    return failures, notes
+
+
+_SUITES = {"hotpath": compare, "dist": compare_dist, "guard": compare_guard}
 
 
 def main(argv: list[str] | None = None) -> None:

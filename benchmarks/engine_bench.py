@@ -515,6 +515,33 @@ def emit_trace(n_txns, trace_level=2):
           "(report: make report; view: https://ui.perfetto.dev)")
 
 
+def chaos_smoke(n_txns, seed=7):
+    """--chaos: one mixed block under a full ChaosConfig schedule — the
+    cheap end-to-end sanity leg CI runs on every commit (the exhaustive
+    seed×backend×mesh grid lives in tests/test_guard.py; the overhead
+    numbers in benchmarks/guard_bench.py).  Asserts the chaos run commits
+    the byte-identical snapshot and prints the schedule-inflation stats."""
+    import dataclasses
+
+    from repro.guard import ChaosConfig
+
+    kw = dict(backend="sharded", n_shards=16, **_dist_cfg_kw()) \
+        if _DEVICES > 0 else {}
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, **kw)
+    ref = make_executor(vm, cfg)(params, storage)
+    assert bool(ref.committed)
+    ccfg = dataclasses.replace(cfg, chaos=ChaosConfig(seed=seed))
+    res = make_executor(vm, ccfg)(params, storage)
+    assert bool(res.committed), "chaos run failed to commit"
+    np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                  np.asarray(ref.snapshot))
+    print(f"chaos smoke OK: snapshot byte-identical; waves "
+          f"{int(ref.waves)} -> {int(res.waves)}, execs "
+          f"{int(ref.execs)} -> {int(res.execs)}, val_aborts "
+          f"{int(ref.val_aborts)} -> {int(res.val_aborts)}")
+
+
 # One shared block size per mode, so BENCH_bytecode.json is comparable no
 # matter which CLI path produced it.
 FAST_N, FULL_N = 512, 1000
@@ -559,6 +586,10 @@ def main() -> None:
                     help="additionally run one trace_level=2 mixed block "
                     "and write WAVE_TRACE.json + CHROME_TRACE.json "
                     "(see repro.obs)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="additionally run one mixed block under a chaos "
+                    "schedule and assert the committed snapshot is "
+                    "byte-identical (see repro.guard)")
     args = ap.parse_args()
     global _DEVICES
     _DEVICES = args.devices
@@ -592,6 +623,8 @@ def main() -> None:
 
     if args.trace:
         emit_trace(n, trace_level=2)
+    if args.chaos:
+        chaos_smoke(n)
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,0 +1,116 @@
+"""Guard/chaos overhead benchmark: what robustness costs on the hotpath.
+
+One grid cell deliberately mirrored from ``benchmarks/hotpath_bench.py``
+(same workload constructor, same ``n_txns=1024, seed=7`` block on the
+sharded backend) so the records cross-gate: the ``guard_level=0 /
+chaos=None`` throughput measured here is the SAME quantity as that cell's
+``tps_incremental`` in the committed ``BENCH_hotpath.json``, and
+``benchmarks/check_regression.py`` holds the two within the usual 10x
+band — the robustness machinery must not tax the default path.
+
+Measured variants (identical block, byte-identical committed snapshots —
+asserted, not assumed):
+
+* ``tps_guard{0,1,2}``  — in-jit invariant checking at each level
+  (level 0 is the production default and the cross-gated number);
+* ``tps_chaos``         — a full ``ChaosConfig`` schedule (all fault
+  classes firing) at guard level 0: the price of an adversarial schedule,
+  mostly extra waves;
+* ``tps_degraded``      — a wave-starved block (``max_waves=1``) taking
+  the sequential degradation fallback: the worst-case liveness floor.
+
+Output: ``BENCH_guard.json`` at the repo root (CI artifact + gate input).
+
+  PYTHONPATH=src python -m benchmarks.guard_bench --fast
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks._emit import write_bench
+from repro.core import workloads as W
+from repro.core.engine import make_executor
+from repro.guard import ChaosConfig
+
+#: The hotpath grid cell this suite mirrors (same constructor arguments).
+CELL = "L100000_s16_z1.1"
+CELL_KW = dict(n_locs=10**5, zipf_s=1.1, backend="sharded", n_shards=16)
+
+
+def _timed_run(vm, params, storage, cfg, reps):
+    run = make_executor(vm, cfg)
+    res = run(params, storage)
+    res.snapshot.block_until_ready()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        res = run(params, storage)
+        res.snapshot.block_until_ready()
+        times.append(time.perf_counter() - t0)
+    return res, cfg.n_txns / float(np.median(times))
+
+
+def run_suite(n_txns=1024, reps=3):
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, **CELL_KW)
+    record = {"n_txns": n_txns, "cell": CELL, "backend": "sharded"}
+
+    variants = {
+        "guard0": cfg,
+        "guard1": dataclasses.replace(cfg, guard_level=1),
+        "guard2": dataclasses.replace(cfg, guard_level=2),
+        "chaos": dataclasses.replace(cfg, chaos=ChaosConfig(seed=7)),
+        "degraded": dataclasses.replace(cfg, max_waves=1),
+    }
+    snap0 = None
+    for name, vcfg in variants.items():
+        res, tps = _timed_run(vm, params, storage, vcfg, reps)
+        assert bool(res.committed), name
+        assert bool(res.degraded) == (name == "degraded"), name
+        if snap0 is None:
+            snap0 = np.asarray(res.snapshot)
+        else:
+            # every variant commits the same preset-order state — a bench
+            # that measured diverging executions would be comparing garbage
+            np.testing.assert_array_equal(np.asarray(res.snapshot), snap0,
+                                          err_msg=name)
+        record[f"tps_{name}"] = tps
+        record[f"waves_{name}"] = int(res.waves)
+        print(f"{name}: {tps:.0f} tps  waves={int(res.waves)}")
+
+    for lvl in (1, 2):
+        record[f"guard{lvl}_overhead_x"] = (record["tps_guard0"]
+                                            / record[f"tps_guard{lvl}"])
+    record["chaos_overhead_x"] = record["tps_guard0"] / record["tps_chaos"]
+    record["degraded_vs_normal_x"] = (record["tps_guard0"]
+                                      / record["tps_degraded"])
+    return record
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true", default=True)
+    ap.add_argument("--full", dest="fast", action="store_false")
+    ap.add_argument("--n-txns", type=int, default=1024,
+                    help="block size (1024 matches the cross-gated "
+                    "hotpath cell; changing it disables the cross-gate)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the record here instead of the repo-root "
+                    "BENCH_guard.json")
+    args = ap.parse_args()
+    reps = args.reps if args.reps is not None else (2 if args.fast else 5)
+    record = run_suite(n_txns=args.n_txns, reps=reps)
+    path = write_bench("guard", record, out=args.out)
+    print(f"wrote {path}  (guard2 overhead "
+          f"{record['guard2_overhead_x']:.2f}x, chaos "
+          f"{record['chaos_overhead_x']:.2f}x, degraded "
+          f"{record['degraded_vs_normal_x']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

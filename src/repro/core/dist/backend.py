@@ -449,6 +449,17 @@ class DistShardedBackend(BackendDefaults):
         return jax.lax.dynamic_slice_in_dim(d, me * SL, SL).sum(
             dtype=jnp.int32)
 
+    def guard_index_ok(self, index: ShardedIndex,
+                       write_locs: jax.Array) -> jax.Array:
+        """Device-LOCAL structural check: delegate to the per-device
+        single-device backend over the localized write set (the same
+        localization ``build``/``update`` use), so the conservation law is
+        checked per shard — deliberately not a collective; the engine's
+        guard report is replicated-AND-merged on block exit
+        (``repro.guard.invariants.merge_device_reports``)."""
+        return self._local.guard_index_ok(
+            index, self._localize(write_locs, self._base()))
+
     def trace_exec_lanes(self, active_ids: jax.Array,
                          active_mask: jax.Array) -> jax.Array:
         """Live lanes THIS device executed — its slice of the partitioned

@@ -76,6 +76,13 @@ def run_block_dist(program, params: Any, storage: jax.Array,
             # everywhere.
             res = res._replace(trace=obs.merge_device_traces(res.trace,
                                                              AXIS))
+        if cfg.guard_level:
+            # Invariant counters are mostly replicated already; the index-
+            # occupancy check is per-device (local CSR vs local write set),
+            # so fold violation counts with a max / first-wave with a min.
+            from repro.guard import invariants as guard_inv
+            res = res._replace(guard=guard_inv.merge_device_reports(
+                res.guard, AXIS))
         return res
 
     inner = _sm(mesh, body, in_specs=(P(), P()), out_specs=P())

@@ -38,6 +38,9 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core import executor, mv
+from repro.guard import chaos as guard_chaos
+from repro.guard import degrade as guard_degrade
+from repro.guard import invariants as guard_inv
 from repro.core.types import (NO_LOC, STORAGE, BlockResult, BlockStats,
                               EngineConfig, EngineState, ExecResult)
 from repro.core.vm import TxnProgram
@@ -89,6 +92,7 @@ def _init_state(cfg: EngineConfig) -> EngineState:
         stat_val_aborts=jnp.asarray(0, jnp.int32),
         stat_wrote_new=jnp.asarray(0, jnp.int32),
         trace=obs.init_trace(cfg),
+        guard=guard_inv.init_report(cfg),
     )
 
 
@@ -209,7 +213,8 @@ def _read_set_valid(state: EngineState, cfg: EngineConfig, read_locs,
 
 
 def _validate_dirty(state: EngineState, cfg: EngineConfig,
-                    cur: jax.Array) -> tuple[jax.Array, obs.ValTraceAux]:
+                    cur: jax.Array) -> tuple[jax.Array, obs.ValTraceAux,
+                                             jax.Array | None]:
     """Full-validation semantics at dirty-row cost (dirty-region skip).
 
     A row may skip validation iff, for every live read, the version of the
@@ -230,7 +235,10 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
     is a collective under the dist backend).  Returns the ``(n,)`` fail
     mask plus the wave's skip telemetry
     (:class:`~repro.obs.trace.ValTraceAux` — dead, and DCE'd, whenever the
-    wave trace does not consume it).
+    wave trace does not consume it) plus, at ``guard_level >= 2``, the
+    dirty-skip shadow count: a full validation pass runs alongside and
+    counts the rows the version test calls clean that the full pass would
+    fail — any nonzero count is an unsound skip (``None`` below level 2).
     """
     n, r = cfg.n_txns, cfg.max_reads
     backend = mv.make_backend(cfg)
@@ -256,6 +264,14 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
                                 state.read_writer, state.read_inc, readers)
         return state.executed & ~valid
 
+    def shadow_viol(fail_full: jax.Array) -> jax.Array | None:
+        # guard_level 2: rows the version test exonerates must pass a full
+        # validation — the dirty-skip soundness invariant, checked against
+        # the full verdict regardless of which path the engine took.
+        if cfg.guard_level < 2:
+            return None
+        return (fail_full & ~need).sum(dtype=jnp.int32)
+
     if k >= n:
         # A capacity covering every row can never narrow the work: the cond
         # predicate would always take the gather path, paying its
@@ -264,7 +280,8 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
         # fallback=False so small blocks don't show a 100% cap-fallback
         # rate in the wave trace (lane accounting is unaffected: k == n
         # here since dirty_cap() is clamped to n_txns, so k*r == n*r).
-        return full_path(None), aux(jnp.asarray(False))
+        fail = full_path(None)
+        return fail, aux(jnp.asarray(False)), shadow_viol(fail)
 
     def gather_path(_):
         (rows,) = jnp.nonzero(need, size=k, fill_value=n)
@@ -278,8 +295,16 @@ def _validate_dirty(state: EngineState, cfg: EngineConfig,
         return jnp.zeros((n,), jnp.bool_).at[rows].set(~valid_k,
                                                        mode="drop") & need
 
+    if cfg.guard_level >= 2:
+        # The shadow pass needs the full verdict anyway; reuse it as the
+        # fallback branch's answer (the gather path stays on the cond so
+        # its machinery remains exercised — and checked — under guard).
+        fail_full = full_path(None)
+        fail = jax.lax.cond(n_need <= k, gather_path,
+                            lambda _: fail_full, None)
+        return fail, aux(n_need > k), shadow_viol(fail_full)
     fail = jax.lax.cond(n_need <= k, gather_path, full_path, None)
-    return fail, aux(n_need > k)
+    return fail, aux(n_need > k), None
 
 
 @_named_phase("blockstm.validate")
@@ -304,9 +329,10 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     # collective under the dist backend — don't re-issue it per use).
     cur = mv.make_backend(cfg).version_view(state.index) if skip else None
     vaux = None
+    skip_viol = None
     if vw <= 0 or vw >= n:
         if skip:
-            fail, vaux = _validate_dirty(state, cfg, cur)
+            fail, vaux, skip_viol = _validate_dirty(state, cfg, cur)
         else:
             readers = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
                                        (n, r))
@@ -344,13 +370,29 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
                 skip_misses=(state.executed & in_window).sum(dtype=jnp.int32),
                 skip_fallback=jnp.asarray(False))
 
+    defer = None
+    if cfg.chaos is not None:
+        # Chaos rides the genuine abort machinery: extra failures flow into
+        # ``fail`` BEFORE the skip bookkeeping below, so estimate flips,
+        # region bumps, and re-execution scheduling happen exactly as for a
+        # real validation failure.  Deferred rows get no verdict at all this
+        # wave — removed from fail AND from commit eligibility.
+        extra, defer = guard_chaos.validation_perturb(state, cfg)
+        fail = (fail | extra) & ~defer
+        ok_for_commit = ok_for_commit & ~extra & ~defer
+
     if skip:
         backend = mv.make_backend(cfg)
         regions = backend.region_of(state.read_locs)
         # Rows that remain executed were either validated this wave or
         # provably clean — either way their reads are now known to resolve
-        # under the CURRENT (pre-bump) region versions.
+        # under the CURRENT (pre-bump) region versions.  A chaos-deferred
+        # row got NO verdict, so its stamps must stay stale (refreshing
+        # them would make a deferred genuine failure skip as clean —
+        # unsound).
         ok_rows = state.executed & ~fail
+        if defer is not None:
+            ok_rows = ok_rows & ~defer
         rrv = jnp.where(ok_rows[:, None], cur[regions],
                         state.read_region_ver)
         # A validation abort flips the failing txn's write set to ESTIMATE
@@ -376,6 +418,11 @@ def _validate_all(state: EngineState, cfg: EngineConfig) -> EngineState:
     if cfg.trace_level:
         state = state._replace(trace=obs.record_validate(
             state.trace, state.wave, fail, frontier, vaux))
+    if cfg.guard_level:
+        # End-of-wave invariant sweep: state.frontier is still the pre-wave
+        # value here, so the monotonicity check sees both sides.
+        state = guard_inv.check_wave(state, cfg, frontier,
+                                     skip_viol=skip_viol)
     return state._replace(frontier=frontier)
 
 
@@ -399,7 +446,14 @@ def _execute_phase(state: EngineState, program: TxnProgram, params: Any,
                    storage: jax.Array,
                    cfg: EngineConfig) -> tuple[EngineState, WaveDelta]:
     """Select + execute + apply one wave; capture its delta for the index."""
+    if cfg.chaos is not None:
+        # Wave-start value corruption: garbage every unreachable (non-
+        # executed) row's write values before anything reads this wave.
+        state = guard_chaos.perturb_values(state, cfg)
     active_ids, active_mask = _select_wave(state, cfg)
+    if cfg.chaos is not None:
+        active_ids, active_mask = guard_chaos.stall_lanes(
+            state, active_ids, active_mask, cfg)
     res = _execute_wave(state, active_ids, program, params, storage, cfg)
     success = active_mask & ~res.blocked
     delta = WaveDelta(
@@ -500,16 +554,55 @@ def _run_block_impl(program: TxnProgram, params: Any, storage: jax.Array,
         return _wave_step(s, program, params, storage, cfg)
 
     state = jax.lax.while_loop(cond, body, state)
+    snapshot, committed, degraded = _finish(state, program, params, storage,
+                                            cfg)
+    trace = state.trace
+    if cfg.trace_level:
+        trace = trace._replace(degraded=degraded)
     return BlockResult(
-        snapshot=_snapshot(state, storage, cfg),
-        committed=state.frontier >= cfg.n_txns,
+        snapshot=snapshot,
+        committed=committed,
+        degraded=degraded,
         waves=state.wave,
         execs=state.stat_execs,
         dep_aborts=state.stat_dep_aborts,
         val_aborts=state.stat_val_aborts,
         wrote_new=state.stat_wrote_new,
-        trace=state.trace,
+        trace=trace,
+        guard=state.guard,
     )
+
+
+def _finish(state: EngineState, program: TxnProgram, params: Any,
+            storage: jax.Array,
+            cfg: EngineConfig) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Post-loop exit: ``(snapshot, committed, degraded)``.
+
+    The converged exit (``frontier == n``) snapshots the MV state as
+    always.  A wave-cap exhaustion instead ``lax.cond``s into the guarded
+    degradation path (:mod:`repro.guard.degrade`): the deterministic
+    sequential executor commits the preset-order state — byte-identical to
+    what a converged speculative run would have committed — unless the
+    block is unsound even sequentially (a txn blocks on its own slot
+    overflow), in which case ``committed=False`` with the partial
+    speculative snapshot, exactly the old failure surface.  With
+    ``degrade_on_stall=False`` the old exit is compiled unchanged.
+    """
+    done = state.frontier >= cfg.n_txns
+    if not cfg.degrade_on_stall:
+        return _snapshot(state, storage, cfg), done, jnp.asarray(False)
+
+    def converged(_):
+        return (_snapshot(state, storage, cfg), jnp.asarray(True),
+                jnp.asarray(False))
+
+    def degrade(_):
+        seq, clean = guard_degrade.sequential_block(program, params,
+                                                    storage, cfg)
+        partial = _snapshot(state, storage, cfg)
+        return jnp.where(clean, seq, partial), clean, clean
+
+    return jax.lax.cond(done, converged, degrade, None)
 
 
 def make_executor(program: TxnProgram, cfg: EngineConfig) -> Callable:
@@ -531,6 +624,13 @@ def run_chain(program: TxnProgram, blocks_params: Any, storage: jax.Array,
     :class:`~repro.core.types.BlockStats` with one leading block axis per
     field — per-block counters come out typed, with no snapshot placeholder
     inflating the scan carry.
+
+    Chain integrity: with ``cfg.degrade_on_stall`` (the default) a block
+    that exhausts its wave budget still commits its preset-order state via
+    the sequential fallback, flagged in ``stats.degraded`` for that block
+    — the chain never silently feeds a partial snapshot forward.  Callers
+    that disable degradation must check ``stats.committed`` themselves:
+    a False entry means every later block executed from a partial state.
     """
     def step(st, params):
         res = run_block(program, params, st, cfg)

@@ -187,6 +187,19 @@ class MVBackend(Protocol):
         """
         ...
 
+    def guard_index_ok(self, index: Any, write_locs: jax.Array) -> jax.Array:
+        """() bool structural health of THIS index view (guard checks).
+
+        Called per wave by the engine's in-jit invariant sweep
+        (``repro.guard.invariants``, ``guard_level >= 1``) with the
+        post-update index and the full ``(n, W)`` write matrix it must
+        index.  Backends check whatever their layout makes checkable —
+        CSR backends verify occupancy == live write slots, monotone
+        segment offsets, and occupancy <= capacity; the default is
+        trivially healthy.
+        """
+        ...
+
 
 class BackendDefaults:
     """Protocol-default batched/placement hooks (single-device layouts).
@@ -230,6 +243,12 @@ class BackendDefaults:
         # backends override with their own occupancy (the distinction that
         # matters once the index is device-local).
         return (write_locs != NO_LOC).sum(dtype=jnp.int32)
+
+    def guard_index_ok(self, index, write_locs) -> jax.Array:
+        # Layouts without a checkable structural invariant (the dense
+        # last-writer table is definitionally consistent) report healthy;
+        # the sorted/CSR backends override with real checks.
+        return jnp.asarray(True)
 
     def trace_dirty_count(self, dirty) -> jax.Array:
         """() i32 count of THIS view's dirtied regions for the wave trace.

@@ -208,6 +208,28 @@ class ShardedBackend(BackendDefaults):
         """CSR occupancy: ``starts[-1]`` is the total live entry count."""
         return index.starts[-1]
 
+    def guard_index_ok(self, index: ShardedIndex,
+                       write_locs: jax.Array) -> jax.Array:
+        """CSR structural health: segment offsets monotone from 0,
+        occupancy within capacity AND exactly the live write-slot count
+        (the conservation law the incremental event merge must preserve
+        wave over wave), segment keys ascending with the dead +inf tail
+        after ``starts[-1]``."""
+        live = (write_locs != NO_LOC).sum(dtype=jnp.int32)
+        occ = index.starts[-1]
+        cap = index.keys.shape[0]
+        offsets_ok = ((index.starts[0] == 0) & (occ <= cap)
+                      & (jnp.diff(index.starts) >= 0).all())
+        pos = jnp.arange(cap, dtype=jnp.int32)
+        # Keys ascend within each segment; across a segment boundary the
+        # local keys may legally drop, so compare only positions whose
+        # predecessor is in the same segment.
+        seg = jnp.searchsorted(index.starts[1:-1], pos, side="right")
+        same_seg = (pos > 0) & (seg == jnp.roll(seg, 1)) & (pos < occ)
+        keys_ok = (~same_seg | (index.keys >= jnp.roll(index.keys, 1))).all()
+        dead_ok = ((pos < occ) | (index.keys == _KEY_MAX)).all()
+        return offsets_ok & (occ == live) & keys_ok & dead_ok
+
     def build(self, write_locs: jax.Array) -> ShardedIndex:
         n, w = write_locs.shape
         if write_locs.dtype != jnp.int32:

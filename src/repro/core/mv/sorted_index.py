@@ -95,3 +95,14 @@ class SortedBackend(BackendDefaults):
             return resolve_sorted(index, self.n_txns, estimate, incarnation,
                                   loc, reader)
         return resolver
+
+    def guard_index_ok(self, index: SortedIndex,
+                       write_locs: jax.Array) -> jax.Array:
+        """Keys ascending (binary-search precondition) and live entry
+        count conserved — one index entry per live write slot.  Live keys
+        are strictly below the dead +inf sentinel (EngineConfig's int32
+        bound leaves headroom), so counting non-sentinels counts entries."""
+        live = (write_locs != NO_LOC).sum(dtype=jnp.int32)
+        entries = (index.keys != _KEY_MAX).sum(dtype=jnp.int32)
+        ascending = (jnp.diff(index.keys) >= 0).all()
+        return ascending & (entries == live)

@@ -77,6 +77,26 @@ class EngineConfig:
                                  # (waves_cap, window) dep-abort attribution
                                  # edges.  The WaveTrace rides EngineState
                                  # .trace and returns in BlockResult.trace.
+    guard_level: int = 0         # in-jit invariant checks (repro.guard):
+                                 # 0 = off (compiles to the exact unguarded
+                                 # program); 1 = per-wave O(n) structural
+                                 # checks; 2 = level 1 + the adversarial
+                                 # checks (read-universe bounds, dirty-skip
+                                 # shadow validation).  The GuardReport
+                                 # rides EngineState.guard and returns in
+                                 # BlockResult.guard.
+    chaos: Any = None            # repro.guard.chaos.ChaosConfig | None:
+                                 # deterministic PRNG-keyed schedule
+                                 # perturbation inside the wave loop.  None
+                                 # (default) is static like trace_level=0 —
+                                 # the chaos hooks are never traced.
+    degrade_on_stall: bool = True  # waves_cap exhausted without frontier ==
+                                 # n_txns -> lax.cond into the deterministic
+                                 # sequential executor (repro.guard.degrade)
+                                 # so the block still commits its preset-
+                                 # order state (BlockResult.degraded=True).
+                                 # False restores the bare committed=False
+                                 # partial-snapshot exit.
 
     def __post_init__(self):
         # Shape sanity first: a nonsense extent would otherwise surface much
@@ -101,6 +121,11 @@ class EngineConfig:
                 f"validation_window={self.validation_window}: expected 0 "
                 f"(validate all executed txns per wave) or a positive sweep "
                 f"width")
+        if self.max_waves < 0:
+            raise ValueError(
+                f"max_waves={self.max_waves}: expected 0 (auto cap: "
+                f"2*n_txns + 8) or a positive wave budget — a negative "
+                f"value would silently alias the auto cap")
         if self.backend not in ("sorted", "dense", "sharded"):
             raise ValueError(f"unknown MV backend {self.backend!r}; expected "
                              f"'sorted', 'dense', or 'sharded'")
@@ -127,6 +152,18 @@ class EngineConfig:
                 f"trace_level={self.trace_level!r}: expected 0 (off), 1 "
                 f"(per-wave counters), or 2 (counters + abort-attribution "
                 f"edges) — see repro.obs.trace")
+        if self.guard_level not in (0, 1, 2):
+            raise ValueError(
+                f"guard_level={self.guard_level!r}: expected 0 (off), 1 "
+                f"(structural per-wave checks), or 2 (+ adversarial "
+                f"checks) — see repro.guard.invariants")
+        if self.chaos is not None:
+            from repro.guard.chaos import ChaosConfig
+            if not isinstance(self.chaos, ChaosConfig):
+                raise ValueError(
+                    f"chaos={self.chaos!r}: expected a "
+                    f"repro.guard.chaos.ChaosConfig (or None for the "
+                    f"unperturbed engine)")
         if self.mesh is not None and tuple(self.mesh.axis_names) != \
                 ("regions",):
             raise ValueError(
@@ -193,6 +230,9 @@ class EngineState(NamedTuple):
                                  # buffers (trace_level >= 1), or None —
                                  # an EMPTY pytree node, so level 0 carries
                                  # exactly the pre-telemetry state
+    guard: Any = None            # repro.guard.invariants.GuardReport
+                                 # (guard_level >= 1), or None — likewise an
+                                 # empty pytree node at level 0
 
     @classmethod
     def dist_spec(cls) -> "EngineState":
@@ -216,7 +256,11 @@ class EngineState(NamedTuple):
             # are only truly local INSIDE a block; the production dist path
             # all_gathers them before the state ever crosses this spec
             # (repro.obs.trace.merge_device_traces).
-            trace=P())
+            trace=P(),
+            # Guard reports are replicated except the device-local index
+            # check; the dist engine merges them on block exit
+            # (repro.guard.invariants.merge_device_reports).
+            guard=P())
 
 
 class ExecResult(NamedTuple):
@@ -239,7 +283,11 @@ class BlockStats(NamedTuple):
     placeholder array through :class:`BlockResult`'s snapshot field.
     """
 
-    committed: jax.Array         # () bool: frontier == n (False => wave cap hit)
+    committed: jax.Array         # () bool: the snapshot is the preset-order
+                                 # state (wave loop converged, or the
+                                 # degradation fallback committed it)
+    degraded: jax.Array          # () bool: the sequential fallback produced
+                                 # the committed state (wave cap exhausted)
     waves: jax.Array             # () i32
     execs: jax.Array             # () i32 total incarnations
     dep_aborts: jax.Array       # () i32
@@ -251,7 +299,12 @@ class BlockResult(NamedTuple):
     """Result of executing one block."""
 
     snapshot: jax.Array          # (n_locs,) final state (MVMemory.snapshot over storage)
-    committed: jax.Array         # () bool: frontier == n (False => wave cap hit)
+    committed: jax.Array         # () bool: snapshot is the preset-order
+                                 # state (False only when degradation is off
+                                 # or the block is unsound even sequentially)
+    degraded: jax.Array          # () bool: committed via the sequential
+                                 # fallback (repro.guard.degrade) after the
+                                 # wave cap ran out
     waves: jax.Array             # () i32
     execs: jax.Array             # () i32 total incarnations
     dep_aborts: jax.Array       # () i32
@@ -260,9 +313,13 @@ class BlockResult(NamedTuple):
     trace: Any = None           # WaveTrace ring buffers (trace_level >= 1);
                                 # rows past `waves` are unwritten — trim
                                 # host-side (repro.obs.export.trace_to_dict)
+    guard: Any = None           # GuardReport (guard_level >= 1) — see
+                                # repro.guard.invariants.summarize
 
     def stats(self) -> BlockStats:
         """The snapshot-free view (typed; see :class:`BlockStats`)."""
-        return BlockStats(committed=self.committed, waves=self.waves,
-                          execs=self.execs, dep_aborts=self.dep_aborts,
-                          val_aborts=self.val_aborts, wrote_new=self.wrote_new)
+        return BlockStats(committed=self.committed, degraded=self.degraded,
+                          waves=self.waves, execs=self.execs,
+                          dep_aborts=self.dep_aborts,
+                          val_aborts=self.val_aborts,
+                          wrote_new=self.wrote_new)

@@ -1,0 +1,36 @@
+"""Robustness layer: chaos schedules, in-jit invariants, guarded degradation.
+
+Block-STM's central safety claim (paper §1, §4) is that *any* speculative
+schedule — however adversarial the interleaving of executions, aborts, and
+validations — converges to the byte-identical preset-order outcome.  The
+engine's conformance suites only ever witness the one schedule the engine
+happens to take; this package makes the claim adversarially testable and
+the engine's liveness unconditional:
+
+* :mod:`repro.guard.chaos`      — :class:`~repro.guard.chaos.ChaosConfig`,
+  a PRNG-keyed, fully deterministic perturbation schedule injected inside
+  the wave loop (spurious validation aborts, committed-prefix re-execution,
+  stalled lanes, deferred validation verdicts, corrupted estimate values).
+  ``EngineConfig.chaos=None`` (default) is static like ``trace_level=0``:
+  the perturbation hooks are never traced.
+* :mod:`repro.guard.invariants` — :class:`~repro.guard.invariants
+  .GuardReport`, in-jit invariant accumulation behind the static
+  ``EngineConfig.guard_level`` (no host callbacks; level 0 compiles to the
+  exact unguarded program).
+* :mod:`repro.guard.degrade`    — the deterministic in-jit sequential
+  executor the engine ``lax.cond``s into when the wave loop exhausts
+  ``waves_cap`` without converging, so every block commits
+  (``BlockResult.degraded``) unless the block is unsound even sequentially.
+
+See README.md in this package for the fault model, the invariant catalog,
+and the degradation semantics; ``tests/test_guard.py`` is the property
+suite.
+"""
+from __future__ import annotations
+
+from repro.guard.chaos import ChaosConfig
+from repro.guard.invariants import (INVARIANTS, GuardReport, assert_clean,
+                                    init_report, summarize)
+
+__all__ = ["ChaosConfig", "GuardReport", "INVARIANTS", "init_report",
+           "summarize", "assert_clean"]

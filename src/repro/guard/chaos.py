@@ -1,0 +1,169 @@
+"""Deterministic chaos schedules for the wave engine.
+
+A :class:`ChaosConfig` hung on ``EngineConfig.chaos`` perturbs the engine
+*inside* its jitted wave loop — the adversarial-scheduler half of the
+paper's safety argument.  Block-STM's invariant is that the committed state
+is independent of the speculative schedule; the engine's ordinary test
+suites only ever observe the one schedule the deterministic BSP loop takes.
+Chaos widens the observed schedule space while keeping every run exactly
+reproducible:
+
+* every perturbation is a pure function of ``(chaos.seed, wave)`` via
+  ``jax.random.fold_in`` — same config, same schedule, bit-for-bit, on
+  every MV backend and on every device of a ``shard_map`` mesh (threefry
+  is elementwise; no collectives are issued);
+* perturbations only fire while ``wave < chaos.horizon``, so every chaos
+  schedule eventually hands the loop back to the unperturbed engine and
+  convergence (or the guarded degradation fallback) is guaranteed;
+* ``chaos=None`` (the default) is STATIC, like ``trace_level=0``: the
+  hooks below are never traced and the compiled program is exactly the
+  unperturbed engine.
+
+Fault model (each hook documents its soundness argument):
+
+===========================  ===========================================
+knob                         perturbation
+===========================  ===========================================
+``corrupt_values``           XOR garbage into the write-slot VALUES of
+                             every non-executed row each wave (aborted
+                             rows' ESTIMATE entries included) — proves no
+                             stale/estimate value can reach a committed
+                             read or the final snapshot.
+``p_stall``                  stall a random suffix of the selected wave's
+                             lanes (execute a 1..window prefix) — proves
+                             progress does not depend on wave shape.
+``p_spurious_abort``         fail validation of executed txns above the
+                             frontier that would have passed — forced
+                             re-execution through the full abort path.
+``p_recommit``               fail validation of txns BELOW the frontier —
+                             forced re-execution of the committed prefix
+                             (the frontier is monotone; soundness holds
+                             because a committed-prefix re-execution reads
+                             only lower committed rows and reproduces its
+                             value set exactly).
+``p_defer_validation``       withhold this wave's verdict for a row
+                             (neither abort nor commit-eligible) — the
+                             BSP analogue of reordering/delaying
+                             validation tasks.
+===========================  ===========================================
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Per-hook fold_in salts: one independent stream per injection point.
+_SALT_VALUES, _SALT_LANES, _SALT_VALIDATE = 0, 1, 2
+
+_PROBS = ("p_stall", "p_spurious_abort", "p_recommit", "p_defer_validation")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """One deterministic perturbation schedule (static; hashable).
+
+    ``horizon`` bounds the waves that perturb: after it the engine runs
+    clean, so any chaos schedule either converges exactly or (if the wave
+    budget ran out first) falls into the guarded degradation path — both
+    end in the preset-order state.
+    """
+
+    seed: int = 0                   # PRNG stream; the whole schedule's key
+    horizon: int = 6                # perturb only while wave < horizon
+    p_stall: float = 0.5            # P[wave keeps only a random lane prefix]
+    p_spurious_abort: float = 0.25  # per executed row above the frontier
+    p_recommit: float = 0.1         # per committed row below the frontier
+    p_defer_validation: float = 0.2  # per executed row: verdict withheld
+    corrupt_values: bool = True     # garbage non-executed rows' write values
+
+    def __post_init__(self):
+        if self.horizon < 0:
+            raise ValueError(f"horizon={self.horizon}: expected >= 0 waves "
+                             f"of perturbation (0 disables every hook)")
+        for name in _PROBS:
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p}: expected a probability in "
+                                 f"[0, 1]")
+
+
+def _key(chaos: ChaosConfig, wave: jax.Array, salt: int) -> jax.Array:
+    k = jax.random.fold_in(jax.random.PRNGKey(chaos.seed), salt)
+    return jax.random.fold_in(k, wave)
+
+
+def _live(chaos: ChaosConfig, wave: jax.Array) -> jax.Array:
+    return wave < chaos.horizon
+
+
+def perturb_values(state, cfg):
+    """Corrupt the write-slot values of every non-executed row (wave start).
+
+    Non-executed rows are exactly the unreachable ones: a never-executed
+    row has no index entries, and an aborted row's entries are
+    ESTIMATE-marked (readers abort on them, validation compares
+    writer/incarnation stamps — never values).  A row's values only become
+    observable again via a successful execution, which overwrites the full
+    row (``_apply_results``), so the garbage provably cannot reach a
+    committed read or the final snapshot — the property the chaos suite
+    pins down byte-for-byte.
+    """
+    ch = cfg.chaos
+    if not ch.corrupt_values:
+        return state
+    vals = state.write_vals
+    big = jnp.iinfo(jnp.int32).max
+    noise = jax.random.randint(_key(ch, state.wave, _SALT_VALUES),
+                               vals.shape, -big // 2, big // 2, jnp.int32)
+    if jnp.issubdtype(vals.dtype, jnp.integer):
+        garbage = (vals.astype(jnp.int32) ^ noise).astype(vals.dtype)
+    else:
+        garbage = vals + noise.astype(vals.dtype)
+    mask = (~state.executed & _live(ch, state.wave))[:, None]
+    return state._replace(write_vals=jnp.where(mask, garbage, vals))
+
+
+def stall_lanes(state, active_ids, active_mask, cfg):
+    """Stall a suffix of the selected wave: keep a random 1..window prefix.
+
+    Applied after ``_select_wave``: stalled lanes are masked back to the
+    out-of-bounds fill id, exactly like an undersized wave.  Keeping a
+    *prefix* preserves lowest-index-first and always executes at least one
+    lane, so progress — and therefore convergence after the horizon — is
+    unconditional.
+    """
+    ch = cfg.chaos
+    win = active_ids.shape[0]
+    kd, kk = jax.random.split(_key(ch, state.wave, _SALT_LANES))
+    stall = jax.random.bernoulli(kd, ch.p_stall) & _live(ch, state.wave)
+    keep = jax.random.randint(kk, (), 1, win + 1)
+    lane_live = ~stall | (jnp.arange(win) < keep)
+    ids = jnp.where(lane_live, active_ids, cfg.n_txns).astype(jnp.int32)
+    return ids, active_mask & lane_live
+
+
+def validation_perturb(state, cfg):
+    """Per-row validation perturbations: ``(extra_fail, defer)`` masks.
+
+    ``extra_fail`` rows are aborted exactly as a genuine validation
+    failure (estimate flip, region bump, re-execution) — above the
+    frontier these are spurious aborts, below it forced re-execution of
+    the committed prefix.  ``defer`` rows get NO verdict this wave:
+    neither aborted nor commit-eligible, and (crucially) their recorded
+    read-region versions are NOT refreshed, so a deferred genuine failure
+    is still caught by a later wave's validation.  The two masks are
+    disjoint by construction.
+    """
+    ch = cfg.chaos
+    n = state.executed.shape[0]
+    ka, kr, kd = jax.random.split(_key(ch, state.wave, _SALT_VALIDATE), 3)
+    live = _live(ch, state.wave)
+    below = jnp.arange(n, dtype=jnp.int32) < state.frontier
+    spurious = jax.random.bernoulli(ka, ch.p_spurious_abort, (n,)) & ~below
+    recommit = jax.random.bernoulli(kr, ch.p_recommit, (n,)) & below
+    extra = (spurious | recommit) & state.executed & live
+    defer = (jax.random.bernoulli(kd, ch.p_defer_validation, (n,))
+             & state.executed & live & ~extra)
+    return extra, defer

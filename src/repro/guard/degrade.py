@@ -1,0 +1,87 @@
+"""Guarded degradation: the in-jit deterministic sequential executor.
+
+When the wave loop exhausts ``waves_cap`` with ``frontier < n_txns`` the
+engine used to return ``committed=False`` and a partial snapshot — a
+liveness cliff that ``run_chain`` then fed to the next block.  With
+``EngineConfig.degrade_on_stall`` (the default) the engine instead
+``lax.cond``s into :func:`sequential_block`: the preset-order sequential
+execution of the whole block as a single ``lax.scan``, entirely in-jit
+(the host-side oracle ``repro.core.vm.run_sequential`` is numpy and cannot
+be called from a traced program).
+
+Semantics: by the paper's correctness claim the sequential state IS the
+state every converged speculative schedule commits, so a degraded block is
+byte-identical to the block that would have committed with a larger wave
+budget — only slower.  ``BlockResult.degraded`` records that the fallback
+ran.
+
+The one exception is a block that cannot execute soundly at all (a txn
+overflowing its read/write slot budget blocks even sequentially — the
+bytecode interpreter raises its ``blocked`` flag with the txn as its own
+blocker).  Such a block must NOT commit garbage: :func:`sequential_block`
+returns a ``clean`` flag that is False if any txn blocked, and the engine
+keeps ``committed=False`` with the partial speculative snapshot in that
+case (``tests/test_bytecode.py::test_slot_overflow_fails_loudly``).
+
+Multi-device: the scan is pure elementwise/replicated work (no
+collectives), so under the dist engine every device computes the identical
+fallback and the replicated-state argument is untouched.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NO_LOC, STORAGE
+
+
+def sequential_block(program, params: Any, storage: jax.Array, cfg):
+    """Execute the block in preset order; return ``(snapshot, clean)``.
+
+    ``snapshot`` is the ``(n_locs,)`` final state vector (same dtype rule
+    as the engine's MV snapshot: ``result_type(value_dtype, storage)``);
+    ``clean`` is a () bool, False iff some txn blocked (slot overflow).
+    Jit-compatible; O(n_txns) scan steps of one VM execution each.
+    """
+    from repro.core import mv
+    from repro.core.vm import make_exec_one
+    n, n_locs, w = cfg.n_txns, cfg.n_locs, cfg.max_writes
+    out_dtype = jnp.result_type(cfg.value_dtype, storage.dtype)
+
+    # Sequential reads never resolve through the MV index: every read of
+    # txn i sees the state vector after txns < i, i.e. resolver always
+    # misses and the value reader serves the evolving vector directly.
+    miss = mv.ReadResolution(
+        found=jnp.asarray(False), writer=jnp.asarray(STORAGE, jnp.int32),
+        slot=jnp.asarray(0, jnp.int32), inc=jnp.asarray(-1, jnp.int32),
+        is_estimate=jnp.asarray(False))
+
+    def step(carry, xs):
+        vec, clean = carry
+        txn_idx, p = xs
+
+        def value_reader(res, loc):
+            # Same NO_LOC contract as mv.resolve_value: disabled reads
+            # clip to location 0 and the VM discards the garbage value.
+            return vec[jnp.clip(loc, 0, n_locs - 1)]
+
+        res = make_exec_one(program, cfg, lambda loc, reader: miss,
+                            value_reader)(txn_idx, p)
+        ok = ~res.blocked
+        for s in range(w):
+            # Per-slot scalar scatter; dead/blocked slots target n_locs
+            # and drop (NO_LOC is negative — never index with it, JAX
+            # wraps negatives).  Later slots overwrite earlier ones,
+            # matching the VM's latest-write-wins slot order.
+            tgt = jnp.where(ok & (res.write_locs[s] != NO_LOC),
+                            res.write_locs[s], n_locs)
+            vec = vec.at[tgt].set(res.write_vals[s].astype(out_dtype),
+                                  mode="drop")
+        return (vec, clean & ok), None
+
+    ids = jnp.arange(n, dtype=jnp.int32)
+    init = (storage.astype(out_dtype), jnp.asarray(True))
+    (vec, clean), _ = jax.lax.scan(step, init, (ids, params))
+    return vec, clean

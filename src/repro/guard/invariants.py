@@ -1,0 +1,139 @@
+"""In-jit engine invariants: a GuardReport accumulated inside the wave loop.
+
+The engine's safety rests on a handful of structural invariants (frontier
+monotonicity, incarnation bounds, index-occupancy conservation, the
+dirty-validation skip's exactness).  They are argued in docstrings and
+property-tested from the outside; this module checks them *inside* the
+jitted loop, on every wave, of every run — including chaos-perturbed and
+multi-device ones — with no host callbacks.
+
+``EngineConfig.guard_level`` is STATIC, like ``trace_level``:
+
+* level 0 (default): :func:`init_report` returns ``None`` and the engine
+  never calls a check — the compiled program is exactly the unguarded one.
+* level 1: O(n) per-wave checks — frontier monotonicity, incarnation
+  bounds, the backend's structural index health
+  (``MVBackend.guard_index_ok``: CSR occupancy/monotonicity for the
+  sharded layouts).
+* level 2: level 1 + the expensive adversarial checks — recorded read
+  locations inside the universe (the precondition that makes the routed
+  resolve's owner bucketing non-overflowing by construction) and
+  dirty-skip soundness (a full validation pass shadows the skip each wave
+  to prove no provably-clean row would actually fail).
+
+The report rides ``EngineState.guard`` (a ``None`` pytree node at level 0)
+and returns in ``BlockResult.guard``.  Under the dist engine each device
+accumulates its own report (the index check is device-local);
+:func:`merge_device_reports` folds them as the block exits the shard_map.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import NO_LOC
+
+#: Invariant catalog, in GuardReport vector order.
+INVARIANTS = ("frontier_monotone", "incarnation_bound", "index_occupancy",
+              "reads_in_universe", "dirty_skip_sound")
+
+#: guard_level at which each invariant starts being checked.
+LEVELS = (1, 1, 1, 2, 2)
+
+_NEVER = -1
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class GuardReport(NamedTuple):
+    """Violation accumulator (shapes: K = ``len(INVARIANTS)``)."""
+
+    violations: jax.Array   # (K,) i32 total violations per invariant
+    first_wave: jax.Array   # (K,) i32 first offending wave, -1 = never
+
+
+def init_report(cfg) -> GuardReport | None:
+    """Fresh report for one block (``None`` at guard level 0)."""
+    if cfg.guard_level <= 0:
+        return None
+    k = len(INVARIANTS)
+    return GuardReport(violations=jnp.zeros((k,), jnp.int32),
+                       first_wave=jnp.full((k,), _NEVER, jnp.int32))
+
+
+def _record(rep: GuardReport, idx: int, count, wave) -> GuardReport:
+    count = jnp.asarray(count).astype(jnp.int32)
+    hit = (count > 0) & (rep.first_wave[idx] == _NEVER)
+    return GuardReport(
+        violations=rep.violations.at[idx].add(count),
+        first_wave=rep.first_wave.at[idx].set(
+            jnp.where(hit, wave.astype(jnp.int32), rep.first_wave[idx])))
+
+
+def check_wave(state, cfg, new_frontier, skip_viol=None):
+    """Fold one wave's invariant checks into ``state.guard``.
+
+    Called from the tail of the engine's validation phase (before the
+    frontier is replaced), so ``state.frontier`` is the pre-wave value and
+    ``new_frontier`` the post-wave one.  ``skip_viol`` is the validation
+    phase's dirty-skip shadow count (level 2 on the skip path; ``None``
+    otherwise).
+    """
+    from repro.core import mv
+    rep = state.guard
+    w = state.wave
+    # 1. The commit frontier never retreats (committed txns stay committed).
+    rep = _record(rep, 0, new_frontier < state.frontier, w)
+    # 2. A txn executes at most once per wave: 0 <= incarnation <= wave+1.
+    inc_bad = (state.incarnation < 0) | (state.incarnation > w + 1)
+    rep = _record(rep, 1, inc_bad.sum(dtype=jnp.int32), w)
+    # 3. Backend structural health (CSR occupancy == live write slots, ...).
+    ok = mv.make_backend(cfg).guard_index_ok(state.index, state.write_locs)
+    rep = _record(rep, 2, ~ok, w)
+    if cfg.guard_level >= 2:
+        # 4. Every recorded live read location lies inside the universe —
+        #    the precondition under which region_of/owner bucketing (and
+        #    with it the routed resolve's capacity argument) is total.
+        live = state.read_locs != NO_LOC
+        oob = live & ((state.read_locs < 0)
+                      | (state.read_locs >= cfg.n_locs))
+        rep = _record(rep, 3, oob.sum(dtype=jnp.int32), w)
+        if skip_viol is not None:
+            # 5. Dirty-skip soundness: no version-clean row would fail a
+            #    full validation pass (computed in engine._validate_dirty).
+            rep = _record(rep, 4, skip_viol, w)
+    return state._replace(guard=rep)
+
+
+def merge_device_reports(rep: GuardReport, axis_name: str) -> GuardReport:
+    """Fold per-device reports into one (dist engine, inside shard_map).
+
+    All checks except the index one are functions of the replicated
+    scheduler state, so the max over devices is exact for them; the index
+    check is device-local, and a violation anywhere is a violation.
+    ``first_wave`` takes the earliest wave any device saw (the ``-1``
+    never-sentinel maps through INT32_MAX so it loses to any real wave).
+    """
+    viol = jax.lax.pmax(rep.violations, axis_name)
+    fw = jnp.where(rep.first_wave == _NEVER, _I32_MAX, rep.first_wave)
+    fw = jax.lax.pmin(fw, axis_name)
+    return GuardReport(violations=viol,
+                       first_wave=jnp.where(fw == _I32_MAX, _NEVER, fw))
+
+
+def summarize(rep: GuardReport) -> dict:
+    """Host-side view: ``{invariant: {violations, first_wave}}``."""
+    import numpy as np
+    v = np.asarray(rep.violations)
+    fw = np.asarray(rep.first_wave)
+    return {name: {"violations": int(v[i]), "first_wave": int(fw[i])}
+            for i, name in enumerate(INVARIANTS)}
+
+
+def assert_clean(rep: GuardReport, context: str = "") -> None:
+    """Raise AssertionError if any invariant was violated (host-side)."""
+    bad = {k: d for k, d in summarize(rep).items() if d["violations"]}
+    if bad:
+        where = f" [{context}]" if context else ""
+        raise AssertionError(f"engine invariant violations{where}: {bad}")

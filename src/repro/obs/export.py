@@ -34,12 +34,13 @@ import numpy as np
 from repro.obs.trace import NO_TXN, WaveTrace
 
 #: Schema tag stamped into every serialized trace (bump on layout change).
-SCHEMA = "blockstm-wave-trace/v2"
+#: v3: + ``frontier_stall`` counter and the block-level ``degraded`` flag.
+SCHEMA = "blockstm-wave-trace/v3"
 
 #: The scalar counter fields, in serialization order.
 COUNTER_FIELDS = ("frontier", "wave_size", "execs", "dep_aborts",
                   "val_aborts", "exec_reads", "val_reads", "skip_hits",
-                  "skip_misses", "skip_fallback")
+                  "skip_misses", "skip_fallback", "frontier_stall")
 
 #: Per-device fields — ``(cap,)`` single-device, ``(D, cap)`` after the
 #: dist merge; serialized with an explicit device axis either way.
@@ -61,6 +62,9 @@ def trace_to_dict(trace: WaveTrace, waves: Any,
         a = a[None, :] if a.ndim == 1 else a       # -> (D, cap) either way
         out[f] = a[:, :w].astype(int).tolist()
     out["devices"] = len(out[DEVICE_FIELDS[0]])
+    degraded = getattr(trace, "degraded", None)
+    out["degraded"] = bool(np.asarray(degraded)) if degraded is not None \
+        else False
     if trace.blocked_ids is not None:
         bi = np.asarray(trace.blocked_ids)[:w]
         bl = np.asarray(trace.blockers)[:w]
@@ -151,6 +155,7 @@ def to_chrome_trace(d: Mapping[str, Any],
             "otherData": {"schema": d.get("schema", SCHEMA),
                           "waves": waves,
                           "devices": int(d.get("devices", 1)),
+                          "degraded": bool(d.get("degraded", False)),
                           "timebase": ("wall_clock" if phase_times
                                        else "virtual_wave_size"),
                           **dict(d.get("meta", {}))}}

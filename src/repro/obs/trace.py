@@ -16,7 +16,7 @@ hook               fields written (at index ``state.wave``)
                          exec_lanes, blocked_ids / blockers (level 2)
 :func:`record_index`     dirty_regions, mv_entries
 :func:`record_validate`  val_aborts, val_reads, skip_hits, skip_misses,
-                         skip_fallback, frontier
+                         skip_fallback, frontier, frontier_stall
 =================  ========================================================
 
 Cost model — ``EngineConfig.trace_level`` is STATIC:
@@ -96,11 +96,20 @@ class WaveTrace(NamedTuple):
                               #   (single-device: == wave_size; (D, cap)
                               #   per-device lane-partition slice sizes
                               #   after dist merge)
+    frontier_stall: jax.Array  # (cap,) i32 consecutive waves (this one
+                              #   included) without frontier progress; 0
+                              #   when the wave advanced it — the liveness
+                              #   counter the degradation guard watches
     # -- level >= 2: abort attribution edges --------------------------------
     blocked_ids: Any = None   # (cap, win) i32 txn ids dep-aborted this wave,
                               #   NO_TXN on non-blocked lanes
     blockers: Any = None      # (cap, win) i32 the ESTIMATE writer each
                               #   blocked txn waits on, NO_TXN likewise
+    # -- block-level flags (set once, post-loop) ----------------------------
+    degraded: Any = None      # () bool the block committed via the
+                              #   sequential degradation fallback
+                              #   (repro.guard.degrade); False scalar at
+                              #   level >= 1
 
 
 def init_trace(cfg) -> WaveTrace | None:
@@ -114,7 +123,8 @@ def init_trace(cfg) -> WaveTrace | None:
         dep_aborts=count(), val_aborts=count(), exec_reads=count(),
         val_reads=count(), skip_hits=count(), skip_misses=count(),
         skip_fallback=jnp.zeros((cap,), jnp.bool_),
-        dirty_regions=count(), mv_entries=count(), exec_lanes=count())
+        dirty_regions=count(), mv_entries=count(), exec_lanes=count(),
+        frontier_stall=count(), degraded=jnp.asarray(False))
     if cfg.trace_level >= 2:
         edges = jnp.full((cap, cfg.window), NO_TXN, jnp.int32)
         tr = tr._replace(blocked_ids=edges, blockers=edges)
@@ -179,15 +189,26 @@ class ValTraceAux(NamedTuple):
 
 def record_validate(trace: WaveTrace, wave: jax.Array, fail: jax.Array,
                     frontier: jax.Array, aux: ValTraceAux) -> WaveTrace:
-    """Validation-phase counters + the end-of-wave commit frontier."""
+    """Validation-phase counters + the end-of-wave commit frontier.
+
+    Also maintains ``frontier_stall``: consecutive waves (this one
+    included) in which the frontier failed to advance — read back from the
+    previous wave's row, so the counter stays in-jit and O(1) per wave.
+    """
     w = wave
+    prev_w = jnp.maximum(w - 1, 0)
+    prev_frontier = jnp.where(w > 0, trace.frontier[prev_w], 0)
+    prev_stall = jnp.where(w > 0, trace.frontier_stall[prev_w], 0)
+    stall = jnp.where(frontier > prev_frontier, 0, prev_stall + 1)
     return trace._replace(
         val_aborts=trace.val_aborts.at[w].set(_i32sum(fail)),
         frontier=trace.frontier.at[w].set(frontier),
         val_reads=trace.val_reads.at[w].set(aux.val_reads),
         skip_hits=trace.skip_hits.at[w].set(aux.skip_hits),
         skip_misses=trace.skip_misses.at[w].set(aux.skip_misses),
-        skip_fallback=trace.skip_fallback.at[w].set(aux.skip_fallback))
+        skip_fallback=trace.skip_fallback.at[w].set(aux.skip_fallback),
+        frontier_stall=trace.frontier_stall.at[w].set(
+            stall.astype(jnp.int32)))
 
 
 def merge_device_traces(trace: WaveTrace, axis_name: str) -> WaveTrace:

@@ -1,0 +1,385 @@
+"""Chaos / guard / degradation property suite (``repro.guard``).
+
+The adversarial half of the determinism story:
+
+* Chaos schedules — a seed grid of ``ChaosConfig`` perturbations (spurious
+  aborts, committed-prefix re-execution, corrupted speculative values,
+  stalled lanes, deferred validation) must leave the committed snapshot
+  byte-identical to the unperturbed sequential baseline, with
+  ``committed=True``, on every MV backend and across 1/2/8 virtual devices
+  of the dist mesh.
+* Guarded degradation — a block that exhausts its wave budget commits the
+  preset-order state via the in-jit sequential fallback
+  (``BlockResult.degraded``); ``run_chain`` carries the flag per block and
+  never feeds a partial snapshot forward.  Blocks that are unsound even
+  sequentially (slot overflow) still refuse to commit.
+* In-jit invariants — ``guard_level`` 1/2 accumulate a ``GuardReport``
+  that stays clean under every chaos schedule; level 0 (the default) is
+  property-tested to be the exact unguarded program: byte-identical
+  results and zero recompiles.
+
+Dist coverage follows ``tests/test_dist.py``'s convention: mesh tests skip
+below 8 devices and the suite re-runs itself in a subprocess with
+``--xla_force_host_platform_device_count=8``.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from _hypo import given, settings, st
+
+from repro.core import workloads as W
+from repro.core.engine import make_executor, run_block, run_chain
+from repro.core.types import EngineConfig
+from repro.core.vm import run_sequential
+from repro.guard import ChaosConfig, GuardReport, assert_clean, summarize
+from repro.guard import invariants as GI
+from repro.launch.mesh import make_mesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+REQUIRED = 8
+_FLAG = f"--xla_force_host_platform_device_count={REQUIRED}"
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < REQUIRED,
+    reason=f"needs {REQUIRED} virtual devices (XLA_FLAGS={_FLAG}); "
+    f"covered via the subprocess runner")
+
+BACKENDS = ("dense", "sorted", "sharded")
+STATS = ("committed", "degraded", "waves", "execs", "dep_aborts",
+         "val_aborts", "wrote_new")
+
+
+def _stats(res):
+    return tuple(int(getattr(res, f)) for f in STATS)
+
+
+def _block(n_txns=48, seed=3, backend="sorted", **kw):
+    shards = dict(n_shards=8) if backend == "sharded" else {}
+    return W.make_mixed_block(W.MixedSpec(), n_txns, seed=seed,
+                              backend=backend, **shards, **kw)
+
+
+def _oracle(vm, params, storage, cfg):
+    return np.asarray(run_sequential(vm, params, storage, cfg.n_txns))
+
+
+# ---------------------------------------------------------------------------
+# Subprocess runner: tier-1 dist coverage without process-wide XLA flags
+# ---------------------------------------------------------------------------
+
+def test_guard_suite_under_virtual_mesh():
+    if len(jax.devices()) >= REQUIRED:
+        pytest.skip("already on a virtual mesh; suite runs directly")
+    env = dict(os.environ, XLA_FLAGS=_FLAG, JAX_PLATFORMS="cpu")
+    env.setdefault("REPRO_FAST_EXAMPLES", "2")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=3000)
+    assert r.returncode == 0, \
+        f"guard suite failed under {_FLAG}:\n{r.stdout[-4000:]}\n" \
+        f"{r.stderr[-2000:]}"
+
+
+# ---------------------------------------------------------------------------
+# Config validation: named errors, no silent nonsense
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_negative_max_waves():
+    with pytest.raises(ValueError, match="max_waves"):
+        EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
+                     max_waves=-1)
+    # 0 stays the documented auto-cap sentinel
+    cfg = EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
+                       max_waves=0)
+    assert cfg.waves_cap() > 0
+
+
+def test_config_rejects_unknown_guard_level():
+    with pytest.raises(ValueError, match="guard_level"):
+        EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
+                     guard_level=3)
+
+
+def test_config_rejects_non_chaosconfig():
+    with pytest.raises(ValueError, match="chaos"):
+        EngineConfig(n_txns=8, n_locs=64, max_reads=4, max_writes=4,
+                     chaos={"seed": 1})
+
+
+def test_chaos_config_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="horizon"):
+        ChaosConfig(horizon=-1)
+    with pytest.raises(ValueError, match="p_stall"):
+        ChaosConfig(p_stall=1.5)
+    with pytest.raises(ValueError, match="p_recommit"):
+        ChaosConfig(p_recommit=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Chaos schedules: byte-identical committed state on every backend
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), backend=st.sampled_from(BACKENDS))
+def test_chaos_commits_sequential_state(seed, backend):
+    vm, params, storage, cfg = _block(seed=seed % 7, backend=backend)
+    expected = _oracle(vm, params, storage, cfg)
+    chaos = ChaosConfig(seed=seed)
+    res = run_block(vm, params, storage,
+                    dataclasses.replace(cfg, chaos=chaos))
+    assert bool(res.committed) and not bool(res.degraded), (seed, backend)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected,
+                                  err_msg=f"seed={seed} {backend}")
+
+
+def test_chaos_schedule_is_reproducible():
+    """Same ChaosConfig => bit-identical run, including the wave count."""
+    vm, params, storage, cfg = _block(backend="sharded")
+    c = dataclasses.replace(cfg, chaos=ChaosConfig(seed=17))
+    a = run_block(vm, params, storage, c)
+    b = run_block(vm, params, storage, c)
+    assert _stats(a) == _stats(b)
+    np.testing.assert_array_equal(np.asarray(a.snapshot),
+                                  np.asarray(b.snapshot))
+
+
+def test_chaos_actually_perturbs():
+    """The fixture must not be vacuous: chaos changes the schedule (more
+    waves / re-executions than the unperturbed run) even though the
+    committed state is unchanged."""
+    vm, params, storage, cfg = _block(backend="sharded")
+    ref = run_block(vm, params, storage, cfg)
+    res = run_block(vm, params, storage, dataclasses.replace(
+        cfg, chaos=ChaosConfig(seed=17)))
+    assert int(res.waves) > int(ref.waves) or int(res.execs) > int(ref.execs)
+    np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                  np.asarray(ref.snapshot))
+
+
+def test_chaos_per_knob_isolation():
+    """Each fault class alone preserves the committed state (a regression
+    in one knob cannot hide behind the others)."""
+    vm, params, storage, cfg = _block(backend="sorted")
+    expected = _oracle(vm, params, storage, cfg)
+    quiet = dict(p_stall=0.0, p_spurious_abort=0.0, p_recommit=0.0,
+                 p_defer_validation=0.0, corrupt_values=False)
+    for knob in ("p_stall", "p_spurious_abort", "p_recommit",
+                 "p_defer_validation", "corrupt_values"):
+        kw = dict(quiet, **{knob: True if knob == "corrupt_values" else 0.7})
+        res = run_block(vm, params, storage, dataclasses.replace(
+            cfg, chaos=ChaosConfig(seed=23, **kw)))
+        assert bool(res.committed), knob
+        np.testing.assert_array_equal(np.asarray(res.snapshot), expected,
+                                      err_msg=knob)
+
+
+# ---------------------------------------------------------------------------
+# Guarded degradation: every block commits; unsound blocks still refuse
+# ---------------------------------------------------------------------------
+
+def test_starved_block_degrades_and_commits():
+    vm, params, storage, cfg = _block(backend="sharded")
+    expected = _oracle(vm, params, storage, cfg)
+    starved = dataclasses.replace(cfg, max_waves=1)
+    res = run_block(vm, params, storage, starved)
+    assert bool(res.committed) and bool(res.degraded)
+    np.testing.assert_array_equal(np.asarray(res.snapshot), expected)
+    # a healthy budget never takes the fallback
+    res2 = run_block(vm, params, storage, cfg)
+    assert bool(res2.committed) and not bool(res2.degraded)
+
+
+def test_degrade_on_stall_false_restores_old_cliff():
+    vm, params, storage, cfg = _block(backend="sorted")
+    starved = dataclasses.replace(cfg, max_waves=1, degrade_on_stall=False)
+    res = run_block(vm, params, storage, starved)
+    assert not bool(res.committed) and not bool(res.degraded)
+
+
+def test_degraded_trace_flag_and_frontier_stall():
+    vm, params, storage, cfg = _block(backend="sorted")
+    starved = dataclasses.replace(cfg, max_waves=1, trace_level=1)
+    res = run_block(vm, params, storage, starved)
+    assert bool(np.asarray(res.trace.degraded))
+    from repro.obs import export as X
+    d = X.trace_to_dict(res.trace, res.waves)
+    assert d["degraded"] is True and "frontier_stall" in d
+    # healthy run: flag off; stall counter resets on every advance
+    res2 = run_block(vm, params, storage,
+                     dataclasses.replace(cfg, trace_level=1))
+    assert not bool(np.asarray(res2.trace.degraded))
+    w = int(res2.waves)
+    fr = np.asarray(res2.trace.frontier)[:w]
+    stall = np.asarray(res2.trace.frontier_stall)[:w]
+    adv = np.diff(np.concatenate([[0], fr])) > 0
+    np.testing.assert_array_equal(stall == 0, adv)
+
+
+def test_chain_carries_degraded_flag_and_commits():
+    """Satellite regression: run_chain must surface committed/degraded per
+    block and a starved chain must still end in the sequential state."""
+    spec = W.P2PSpec(n_accounts=20)
+    n_txns, n_blocks = 32, 3
+    cfg = W.p2p_engine_config(spec, n_txns, window=8)
+    blocks = []
+    for b in range(n_blocks):
+        params, storage0 = W.make_p2p_block(spec, n_txns, seed=200 + b)
+        blocks.append(params)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    prog = W.p2p_program(spec)
+
+    expected = np.asarray(storage0)
+    for b in range(n_blocks):
+        expected = run_sequential(prog, blocks[b], expected, n_txns)
+
+    starved = dataclasses.replace(cfg, max_waves=1)
+    final, stats = jax.jit(
+        lambda bp, st_: run_chain(prog, bp, st_, starved))(stacked, storage0)
+    assert bool(np.asarray(stats.committed).all())
+    assert bool(np.asarray(stats.degraded).all())
+    assert np.asarray(stats.committed).shape == (n_blocks,)
+    np.testing.assert_array_equal(np.asarray(final), expected)
+
+    # healthy chain: same state, no degradation
+    final2, stats2 = jax.jit(
+        lambda bp, st_: run_chain(prog, bp, st_, cfg))(stacked, storage0)
+    assert bool(np.asarray(stats2.committed).all())
+    assert not bool(np.asarray(stats2.degraded).any())
+    np.testing.assert_array_equal(np.asarray(final2), expected)
+
+
+def test_slot_overflow_still_refuses_to_commit():
+    """Degradation must NOT launder unsound blocks: a txn that overflows
+    its read budget blocks even sequentially, so committed stays False
+    (same fixture as test_bytecode.py::test_slot_overflow_fails_loudly)."""
+    from repro.bytecode import BytecodeVM
+    from repro.bytecode.assembler import Assembler
+
+    a = Assembler()
+    loc = a.imm(1)
+    a.read(loc)
+    a.read(loc)      # second READ overflows max_reads=1
+    a.write(loc, a.imm(3))
+    prog = a.build()
+    vm = BytecodeVM(n_regs=prog.n_regs)
+    cfg = EngineConfig(n_txns=1, n_locs=4, max_reads=1, max_writes=1,
+                       window=1, max_waves=6)
+    params = {"code": jnp.asarray(prog.code[None]),
+              "args": jnp.zeros((1, 1), jnp.int32)}
+    res = run_block(vm, params, jnp.zeros(4, jnp.int32), cfg)
+    assert not bool(res.committed)
+    assert not bool(res.degraded)
+
+
+# ---------------------------------------------------------------------------
+# Guard levels: clean reports under chaos, exact level-0 gating
+# ---------------------------------------------------------------------------
+
+def test_guard_level0_is_none_and_exact():
+    vm, params, storage, cfg = _block(backend="sharded")
+    ref = run_block(vm, params, storage, cfg)
+    assert ref.guard is None
+    for lvl in (1, 2):
+        res = run_block(vm, params, storage,
+                        dataclasses.replace(cfg, guard_level=lvl))
+        assert isinstance(res.guard, GuardReport)
+        assert_clean(res.guard, f"level {lvl}")
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot))
+        assert _stats(res) == _stats(ref), lvl
+
+
+def test_guard_zero_recompiles_across_mixes():
+    """The default config compiles ONE program that serves every block —
+    chaos=None / guard_level=0 gating must not leak into the cache key."""
+    vm, params, storage, cfg = _block()
+    run = make_executor(vm, cfg)
+    for i, ratios in enumerate([(1, 1, 1), (8, 1, 1), (1, 1, 8)]):
+        _, params, storage, _ = W.make_mixed_block(
+            W.MixedSpec(ratios=ratios), cfg.n_txns, seed=30 + i)
+        res = run(params, storage)
+        assert bool(res.committed)
+    assert run._cache_size() == 1, run._cache_size()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**16), backend=st.sampled_from(BACKENDS))
+def test_guard_stays_clean_under_chaos(seed, backend):
+    """Level-2 invariants hold on every chaos schedule — the adversarial
+    runs are exactly where a broken invariant would surface."""
+    vm, params, storage, cfg = _block(seed=seed % 5, backend=backend)
+    res = run_block(vm, params, storage, dataclasses.replace(
+        cfg, guard_level=2, chaos=ChaosConfig(seed=seed)))
+    assert bool(res.committed)
+    assert_clean(res.guard, f"chaos seed={seed} {backend}")
+    s = summarize(res.guard)
+    assert set(s) == set(GI.INVARIANTS)
+    assert all(d["first_wave"] == -1 for d in s.values())
+
+
+def test_guard_detects_planted_violation():
+    """The checks must be able to fire: hand check_wave a state whose
+    frontier retreats and whose incarnations are out of bounds."""
+    vm, params, storage, cfg = _block(n_txns=16, backend="sorted")
+    gcfg = dataclasses.replace(cfg, guard_level=2)
+    from repro.core.engine import _init_state
+    state = jax.jit(lambda: _init_state(gcfg))()
+    state = state._replace(
+        frontier=jnp.asarray(5, jnp.int32),
+        incarnation=state.incarnation.at[3].set(99))
+    checked = GI.check_wave(state, gcfg, jnp.asarray(2, jnp.int32),
+                            skip_viol=jnp.asarray(4, jnp.int32))
+    s = summarize(checked.guard)
+    assert s["frontier_monotone"]["violations"] == 1
+    assert s["incarnation_bound"]["violations"] == 1
+    assert s["dirty_skip_sound"]["violations"] == 4
+    assert s["frontier_monotone"]["first_wave"] == 0
+    with pytest.raises(AssertionError, match="frontier_monotone"):
+        assert_clean(checked.guard)
+
+
+# ---------------------------------------------------------------------------
+# Dist mesh: chaos + guard + degradation across 1/2/8 virtual devices
+# ---------------------------------------------------------------------------
+
+@needs_mesh
+def test_dist_chaos_matches_single_device():
+    vm, params, storage, cfg = _block(n_txns=64, backend="sharded",
+                                      n_locs=50_000, zipf_s=1.1)
+    base = dataclasses.replace(cfg, chaos=ChaosConfig(seed=29),
+                               guard_level=2)
+    ref = run_block(vm, params, storage, base)
+    assert bool(ref.committed)
+    assert_clean(ref.guard, "single-device chaos")
+    for d in (1, 2, 8):
+        dcfg = dataclasses.replace(base, dist=True,
+                                   mesh=make_mesh("regions", (d,)))
+        res = run_block(vm, params, storage, dcfg)
+        np.testing.assert_array_equal(np.asarray(res.snapshot),
+                                      np.asarray(ref.snapshot),
+                                      err_msg=f"D={d}")
+        assert _stats(res) == _stats(ref), d
+        assert_clean(res.guard, f"D={d}")
+
+
+@needs_mesh
+def test_dist_degradation_commits():
+    vm, params, storage, cfg = _block(n_txns=32, backend="sharded")
+    expected = _oracle(vm, params, storage, cfg)
+    for d in (2, 8):
+        dcfg = dataclasses.replace(cfg, max_waves=1, dist=True,
+                                   mesh=make_mesh("regions", (d,)))
+        res = run_block(vm, params, storage, dcfg)
+        assert bool(res.committed) and bool(res.degraded), d
+        np.testing.assert_array_equal(np.asarray(res.snapshot), expected,
+                                      err_msg=f"D={d}")
