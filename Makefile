@@ -1,10 +1,14 @@
 # Tier-1 verify and smoke benchmarks in one command each.
 PY ?= python
 
+# Every registered suite (incl. dist) needs the 8-virtual-device host
+# platform; the flag must reach XLA before jax initializes its backend.
+BENCH_ENV = JAX_PLATFORMS=cpu \
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src
+
 .PHONY: test test-fast test-dist test-guard bench-smoke bench \
-	bench-baselines bench-shards bench-hotpath bench-dist bench-guard \
-	profile report check-regression check-regression-dist \
-	check-regression-guard
+	bench-bytecode bench-baselines bench-shards bench-hotpath bench-dist \
+	bench-guard profile report dashboard check-regression-all
 
 test:
 	$(PY) -m pytest -x -q
@@ -30,40 +34,37 @@ test-guard:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PY) -m pytest -x -q tests/test_guard.py
 
-# Fast perf record: mixed-contract bytecode block through one jitted executor.
+# Fast smoke: mixed-contract bytecode block through one jitted executor
+# (no record emitted — the full suite is bench-bytecode).
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload mixed --fast
 
-# Four-engine comparison grid (sequential/Block-STM/Bohm/LiTM on mixed
-# blocks) + branch-free-ALU A/B -> BENCH_baselines.json.
+# One registered suite each, through the shared registry harness
+# (benchmarks/registry.py): regenerates the repo-root BENCH_<suite>.json
+# baseline and appends a commit-stamped BENCH_HISTORY.jsonl line.
+bench-bytecode:
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run bytecode --fast
+
 bench-baselines:
-	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload baselines --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run baselines --fast
 
-# Sharded MV backend grid (n_locs x n_shards x zipf_s, up to 10M locations)
-# -> BENCH_shards.json.
 bench-shards:
-	PYTHONPATH=src $(PY) -m benchmarks.engine_bench --workload shards --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run shards --fast
 
-# Wave hot-loop phase timings: incremental backend.update vs full rebuild
-# per wave (+ end-to-end tps both ways) on the shard grid
-# -> BENCH_hotpath.json (uploaded as a CI artifact).
 bench-hotpath:
-	PYTHONPATH=src $(PY) -m benchmarks.hotpath_bench --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run hotpath --fast
 
-# Multi-device per-wave phase timings over devices {1,2,8} x zipf x n_locs
-# at fixed regions-per-device -> BENCH_dist.json (uploaded as a CI
-# artifact).  Forces its own 8-device host platform before importing jax.
 bench-dist:
-	PYTHONPATH=src $(PY) -m benchmarks.dist_bench --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run dist --fast
 
-# Guard/chaos overhead on the mirrored hotpath cell: guard levels 0/1/2,
-# a full chaos schedule, and the sequential degradation fallback
-# -> BENCH_guard.json (cross-gated against BENCH_hotpath.json).
 bench-guard:
-	PYTHONPATH=src $(PY) -m benchmarks.guard_bench --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run guard --fast
 
+# Every registered suite under one harness and one host platform (the
+# 8-device mesh, so the dist suite is included and all records carry the
+# same env stamp).
 bench:
-	PYTHONPATH=src $(PY) -m benchmarks.run --fast
+	$(BENCH_ENV) $(PY) -m benchmarks.registry run --all --fast
 
 # Perfetto profile of a representative mixed block: jax.profiler.trace dump
 # under profiles/ with the engine's blockstm.* named scopes labelling the
@@ -77,26 +78,17 @@ profile:
 report:
 	PYTHONPATH=src $(PY) -m repro.obs.report WAVE_TRACE.json
 
-# The CI perf gate, locally: fresh hotpath record vs the committed baseline
-# (fails only on order-of-magnitude regressions).
-check-regression:
-	PYTHONPATH=src $(PY) -m benchmarks.hotpath_bench --fast \
-		--out BENCH_hotpath.fresh.json
-	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
-		BENCH_hotpath.fresh.json
+# Cross-commit perf-trajectory trend tables over BENCH_HISTORY.jsonl (one
+# git-SHA-stamped line per registry suite run).
+dashboard:
+	PYTHONPATH=src $(PY) -m repro.obs.report --history
 
-# Same gate for the multi-device record (throughput in the 10x band plus the
-# execute partition's exact lanes/routed-bytes-per-device structure).
-check-regression-dist:
-	PYTHONPATH=src $(PY) -m benchmarks.dist_bench --fast \
-		--out BENCH_dist.fresh.json
-	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
-		BENCH_dist.fresh.json
-
-# Guard gate: fresh guard record vs the committed BENCH_guard.json, plus
-# the tps_guard0 cross-check against the committed hotpath cell.
-check-regression-guard:
-	PYTHONPATH=src $(PY) -m benchmarks.guard_bench --fast \
-		--out BENCH_guard.fresh.json
-	PYTHONPATH=src $(PY) -m benchmarks.check_regression \
-		BENCH_guard.fresh.json
+# The CI perf gate, locally: measure a fresh record for EVERY registered
+# suite (under bench_fresh/) and gate each against its committed repo-root
+# baseline by the registry's declared metrics — throughput within the 10x
+# band, structural quantities exact, aggregates refused across
+# incomparable runs.  Single-record usage:
+#   PYTHONPATH=src python -m benchmarks.check_regression <fresh.json>
+check-regression-all:
+	$(BENCH_ENV) $(PY) -m benchmarks.check_regression --run-all \
+		--fresh-dir bench_fresh

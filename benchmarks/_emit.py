@@ -11,7 +11,13 @@ shards records, hotpath_bench, dist_bench) go through
 * ``suite`` — which generator produced it;
 * ``env`` — the jax/python versions and the device platform+count the
   numbers were measured on (CPU wall-clock comparisons are only
-  meaningful within a platform).
+  meaningful within a platform);
+* ``run`` — the run metadata: ``mode`` (``fast`` / ``full``) and the grid
+  parameters the suite actually measured with.  Aggregate metrics
+  (medians over the grid) are only meaningful between runs over the SAME
+  cell set, so the regression gate refuses to compare aggregates across
+  differing run metadata (:class:`IncomparableRunsError`) instead of
+  silently comparing medians over different grids.
 
 No wall-clock timestamp: records are committed at the repo root, and the
 measured fields are the only diff a regeneration should show.
@@ -25,7 +31,17 @@ import sys
 from typing import Any, Mapping
 
 #: Bump when any suite's record layout changes incompatibly.
-SCHEMA_REV = 2
+#: rev 3: records carry ``run`` metadata (mode + grid params) and every
+#: suite is emitted through ``benchmarks.registry.run_suite``.
+SCHEMA_REV = 3
+
+
+class IncomparableRunsError(ValueError):
+    """Two records whose aggregate metrics must not be compared: they were
+    measured under different run metadata (``--fast`` vs ``--full``, or
+    different grid parameters), so grid-wide aggregates like
+    ``median_update_vs_build_x`` would be medians over different cell
+    sets.  Regenerate one side with the other's mode instead."""
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -52,12 +68,21 @@ def bench_path(name: str, out: str | None = None) -> str:
 
 
 def write_bench(name: str, payload: Mapping[str, Any],
-                out: str | None = None) -> str:
-    """Write one suite's record; returns the path written."""
+                out: str | None = None, mode: str | None = None,
+                params: Mapping[str, Any] | None = None) -> str:
+    """Write one suite's record; returns the path written.
+
+    ``mode`` / ``params`` stamp the run metadata (``record["run"]``) —
+    which cell set the numbers were measured over.  Callers going through
+    ``benchmarks.registry.run_suite`` always stamp both; a record written
+    without them carries ``mode="unknown"`` and can never satisfy the
+    aggregate-comparison guard against a stamped record."""
     record = dict(payload)
     record["suite"] = name
     record["schema_rev"] = SCHEMA_REV
     record["env"] = _env_stamp()
+    record["run"] = {"mode": mode or "unknown",
+                     "params": dict(params or {})}
     path = bench_path(name, out)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)

@@ -1,83 +1,55 @@
-"""CI perf-regression gate over the committed benchmark baselines.
+"""Registry-driven CI perf-regression gate over every benchmark suite.
 
-Compares a freshly measured record (``hotpath_bench --out`` /
-``dist_bench --out``) against the committed repo-root baseline of the
-same suite and fails (exit 1) only on ORDER-OF-MAGNITUDE regressions —
-CI machines are shared and noisy, so the default tolerance is 10x: the
-gate exists to catch "the incremental path silently fell off a perf
-cliff" (e.g. an accidental O(block) rebuild inside ``backend.update``,
-the engine recompiling per wave, or the dist engine's throughput
-collapsing under a routing change), not 20% jitter.
+One generic loop replaces the per-suite compare functions: each suite's
+gate contract lives in its :mod:`benchmarks.registry` metric declarations
+(direction ``higher`` / ``lower`` / ``exact``, tolerance band, scope
+``record`` / ``cell``), so adding a metric to a suite automatically gates
+it here.  The gate fails (exit 1) only on ORDER-OF-MAGNITUDE regressions
+by default — CI machines are shared and noisy, so 10x: it exists to catch
+"the incremental path silently fell off a perf cliff" (an accidental
+O(block) rebuild inside ``backend.update``, the engine recompiling per
+wave, dist throughput collapsing under a routing change), not 20% jitter.
 
-``hotpath`` records check, per grid cell present in BOTH records:
+Beyond the band checks:
 
-* ``tps_incremental``        — end-to-end engine throughput;
-* ``update_vs_build_x``      — the incremental-maintenance advantage
-                               (must not collapse toward the rebuild path);
+* ``direction='exact'`` metrics (partition shapes, schedule waves/execs,
+  recompile counts, the HLO-derived routed-read payload) fail on ANY
+  drift between comparable runs — they are structural, not noisy;
+* grid cells present in only one record are reported but never fail
+  (grid drift); an int32-refusal cell FLIPPING between records fails when
+  the runs are comparable — the config's feasibility changed;
+* aggregate metrics (grid-wide medians) are refused outright between
+  runs with different run metadata (``--fast`` vs ``--full``, different
+  grid params): :class:`benchmarks._emit.IncomparableRunsError` instead
+  of silently comparing medians over different cell sets;
+* a suite's ``extra_gate`` hook runs last (the guard suite cross-gates
+  ``tps_guard0`` against the committed hotpath baseline's mirrored cell).
 
-plus the aggregate ``median_update_vs_build_x``.
+Two entry points:
 
-``dist`` records check, per grid cell present in BOTH records:
-
-* ``tps_dist``               — end-to-end dist-engine throughput;
-* ``tps_single_device``      — the single-device reference on the same
-                               block (so a shared slowdown reads as two
-                               correlated notes, not a dist regression);
-
-plus the structural execute-partition quantities (``lanes_per_device``,
-``routed_read_bytes_per_device``): these are pure functions of the config,
-so at equal block size any drift is a partition change, which fails the
-gate outright.
-
-``guard`` records (``guard_bench --out``) check every variant's
-throughput (``tps_guard{0,1,2}`` / ``tps_chaos`` / ``tps_degraded``)
-against the committed guard baseline, and additionally cross-gate
-``tps_guard0`` against the committed hotpath baseline's mirrored grid
-cell — the default path must not quietly pay for the robustness
-machinery.
-
-Cells present in only one record (grid drift) are reported but never fail
-the gate.  Both records must carry the emitter's current ``schema_rev``
-(``benchmarks/_emit.py``) — incomparable layouts refuse loudly instead
-of comparing garbage; the suite is read from the fresh record and must
-match the baseline's.
-
+    # gate one fresh record against its committed baseline
     PYTHONPATH=src python -m benchmarks.hotpath_bench --fast --out /tmp/fresh.json
     PYTHONPATH=src python -m benchmarks.check_regression /tmp/fresh.json
-    PYTHONPATH=src python -m benchmarks.dist_bench --fast --out /tmp/fresh_dist.json
-    PYTHONPATH=src python -m benchmarks.check_regression /tmp/fresh_dist.json
+
+    # measure + gate EVERY registered suite (CI's make check-regression-all)
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.check_regression --run-all
 """
 from __future__ import annotations
 
 import sys
 
-from benchmarks._emit import bench_path, load_bench
+from benchmarks import registry as REG
+from benchmarks._emit import IncomparableRunsError, bench_path, load_bench
 
 #: Fail only when fresh is worse than baseline by this factor.
 DEFAULT_TOLERANCE = 10.0
 
-#: Per-cell higher-is-better metrics to gate on, by suite.
-CELL_METRICS = ("tps_incremental", "update_vs_build_x")
-DIST_CELL_METRICS = ("tps_dist", "tps_single_device")
 
-#: Per-cell exact structural quantities of the dist execute partition.
-DIST_STRUCTURAL = ("lanes_per_device", "routed_read_bytes_per_device")
-
-#: Guard-suite higher-is-better metrics (benchmarks/guard_bench.py).
-GUARD_METRICS = ("tps_guard0", "tps_guard1", "tps_guard2", "tps_chaos",
-                 "tps_degraded")
-
-
-def _checker(failures: list[str], notes: list[str], tolerance: float):
-    def check(name: str, base_v: float, fresh_v: float) -> None:
-        ratio = fresh_v / max(base_v, 1e-12)
-        line = f"{name}: baseline {base_v:.3g} fresh {fresh_v:.3g} " \
-               f"({ratio:.2f}x)"
-        if fresh_v * tolerance < base_v:
-            failures.append(line + f"  << {tolerance:.0f}x regression")
-        else:
-            notes.append(line)
-    return check
+def _runs_comparable(baseline: dict, fresh: dict) -> bool:
+    """Measured over the same cell set: identical run metadata (mode +
+    grid params, stamped by ``_emit.write_bench``)."""
+    return baseline.get("run") == fresh.get("run")
 
 
 def _grid_cells(baseline: dict, fresh: dict, notes: list[str]):
@@ -92,134 +64,193 @@ def _grid_cells(baseline: dict, fresh: dict, notes: list[str]):
         yield cell, bgrid[cell], fgrid[cell]
 
 
-def compare(baseline: dict, fresh: dict,
-            tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
-                                                           list[str]]:
-    """Hotpath-suite gate. Returns (failures, notes); empty failures == OK."""
+def compare_records(suite, baseline: dict, fresh: dict,
+                    tolerance: float = DEFAULT_TOLERANCE
+                    ) -> tuple[list[str], list[str]]:
+    """Gate one fresh record against its baseline by the suite's declared
+    metrics.  Returns (failures, notes); empty failures == OK."""
     failures: list[str] = []
     notes: list[str] = []
-    check = _checker(failures, notes, tolerance)
+    comparable = _runs_comparable(baseline, fresh)
+    aggregates = [m for m in suite.metrics.values() if m.aggregate]
+    if aggregates and not comparable:
+        raise IncomparableRunsError(
+            f"suite {suite.name!r}: aggregate metrics "
+            f"{sorted(m.name for m in aggregates)} cannot be compared "
+            f"between runs with different metadata — baseline run "
+            f"{baseline.get('run')}, fresh run {fresh.get('run')}; "
+            f"regenerate one side with the other's mode/params")
 
-    check("median_update_vs_build_x",
-          float(baseline["median_update_vs_build_x"]),
-          float(fresh["median_update_vs_build_x"]))
+    def check(name, base_v, fresh_v, metric=None):
+        direction = metric.direction if metric is not None else "higher"
+        tol = tolerance if metric is None or metric.tolerance is None \
+            else metric.tolerance
+        if direction == "exact":
+            if base_v != fresh_v:
+                line = (f"{name}: baseline {base_v!r} fresh {fresh_v!r} "
+                        f"— structural drift")
+                if comparable:
+                    failures.append(line)
+                else:
+                    notes.append(line + "  (runs not comparable, not gated)")
+            else:
+                notes.append(f"{name}: {fresh_v!r} (exact)")
+            return
+        base_v, fresh_v = float(base_v), float(fresh_v)
+        ratio = fresh_v / max(base_v, 1e-12)
+        line = f"{name}: baseline {base_v:.3g} fresh {fresh_v:.3g} " \
+               f"({ratio:.2f}x)"
+        worse = (fresh_v * tol < base_v) if direction == "higher" \
+            else (fresh_v > base_v * tol)
+        if worse:
+            failures.append(line + f"  << {tol:.0f}x regression")
+        else:
+            notes.append(line)
+
+    for m in suite.record_metrics():
+        bv, fv = REG._dig(baseline, m.name), REG._dig(fresh, m.name)
+        if bv is None and fv is None:
+            continue
+        if fv is None:
+            # the record contract shrank: a metric the baseline carries
+            # vanished from fresh measurement — that IS a regression when
+            # the runs are comparable (a silently dropped gate otherwise)
+            (failures if comparable else notes).append(
+                f"{m.name}: present in baseline, missing in fresh record")
+            continue
+        if bv is None:
+            notes.append(f"{m.name}: new metric (no baseline value yet, "
+                         f"gates after the baseline is regenerated)")
+            continue
+        check(m.name, bv, fv, m)
+
+    cell_metrics = suite.cell_metrics()
     for cell, b, f in _grid_cells(baseline, fresh, notes):
         if "error" in b or "error" in f:
             # int32-refusal cells carry no numbers; a refusal flipping
             # between records IS worth failing on — the config's
-            # feasibility changed.  Only comparable at equal block size
-            # (the refusal bound depends on n_txns).
+            # feasibility changed.  Only gated between comparable runs
+            # (the refusal bound depends on the grid params).
             if ("error" in b) != ("error" in f):
                 line = (f"{cell}: refusal state changed "
                         f"(baseline error={b.get('error')!r}, "
                         f"fresh error={f.get('error')!r})")
-                if baseline.get("n_txns") == fresh.get("n_txns"):
-                    failures.append(line)
-                else:
-                    notes.append(line + "  (different n_txns, not gated)")
-            continue
-        for metric in CELL_METRICS:
-            check(f"{cell}.{metric}", float(b[metric]), float(f[metric]))
-    return failures, notes
-
-
-def compare_dist(baseline: dict, fresh: dict,
-                 tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
-                                                                list[str]]:
-    """Dist-suite gate: throughput within the band, partition shape exact."""
-    failures: list[str] = []
-    notes: list[str] = []
-    check = _checker(failures, notes, tolerance)
-    comparable = baseline.get("n_txns") == fresh.get("n_txns")
-
-    for cell, b, f in _grid_cells(baseline, fresh, notes):
-        for metric in DIST_CELL_METRICS:
-            check(f"{cell}.{metric}", float(b[metric]), float(f[metric]))
-        for metric in DIST_STRUCTURAL:
-            if metric not in b or metric not in f:
-                continue
-            if b[metric] != f[metric]:
-                line = (f"{cell}.{metric}: baseline {b[metric]} "
-                        f"fresh {f[metric]} — execute partition changed")
                 if comparable:
                     failures.append(line)
                 else:
-                    notes.append(line + "  (different n_txns, not gated)")
-            else:
-                notes.append(f"{cell}.{metric}: {f[metric]} (exact)")
+                    notes.append(line + "  (runs not comparable, not gated)")
+            continue
+        for m in cell_metrics:
+            bv, fv = REG._dig(b, m.name), REG._dig(f, m.name)
+            if bv is None or fv is None:
+                notes.append(f"{cell}.{m.name}: missing in "
+                             f"{'baseline' if bv is None else 'fresh'} "
+                             f"(not gated)")
+                continue
+            check(f"{cell}.{m.name}", bv, fv, m)
+
+    if suite.extra_gate is not None:
+        suite.extra_gate(baseline, fresh, check, notes)
     return failures, notes
 
 
-def compare_guard(baseline: dict, fresh: dict,
-                  tolerance: float = DEFAULT_TOLERANCE) -> tuple[list[str],
-                                                                 list[str]]:
-    """Guard-suite gate: every variant's throughput within the band, PLUS
-    the cross-gate against the committed hotpath baseline — the
-    ``guard_level=0 / chaos=None`` number is measured on the same block as
-    one ``BENCH_hotpath.json`` grid cell (``guard_bench.CELL``), so the
-    robustness machinery landing a hidden tax on the default path shows
-    up here even before the guard baseline itself is regenerated."""
-    failures: list[str] = []
-    notes: list[str] = []
-    check = _checker(failures, notes, tolerance)
-
-    for metric in GUARD_METRICS:
-        if metric in baseline and metric in fresh:
-            check(metric, float(baseline[metric]), float(fresh[metric]))
-
-    cell = fresh.get("cell")
-    try:
-        hotpath = load_bench(bench_path("hotpath"), expect_suite="hotpath")
-    except (OSError, ValueError) as e:
-        notes.append(f"hotpath cross-gate skipped: {e}")
-        return failures, notes
-    hcell = hotpath.get("grid", {}).get(cell, {})
-    if hotpath.get("n_txns") != fresh.get("n_txns"):
-        notes.append(f"hotpath cross-gate skipped: n_txns "
-                     f"{hotpath.get('n_txns')} != {fresh.get('n_txns')}")
-    elif "tps_incremental" not in hcell:
-        notes.append(f"hotpath cross-gate skipped: no cell {cell!r} in the "
-                     f"committed BENCH_hotpath.json")
-    else:
-        check(f"hotpath:{cell}.tps_incremental vs tps_guard0",
-              float(hcell["tps_incremental"]), float(fresh["tps_guard0"]))
-    return failures, notes
+def _report(suite_name: str, failures: list[str], notes: list[str],
+            tolerance: float) -> bool:
+    for line in notes:
+        print("  " + line)
+    if failures:
+        print(f"\nPERF REGRESSION [{suite_name}] ({len(failures)} "
+              f"metric(s)):", file=sys.stderr)
+        for line in failures:
+            print("  " + line, file=sys.stderr)
+        return False
+    print(f"perf gate OK [{suite_name}]: {len(notes)} metrics within "
+          f"{tolerance:.0f}x of baseline")
+    return True
 
 
-_SUITES = {"hotpath": compare, "dist": compare_dist, "guard": compare_guard}
+def run_all_gate(suites: list[str] | None = None,
+                 tolerance: float = DEFAULT_TOLERANCE, fast: bool = True,
+                 fresh_dir: str | None = None) -> int:
+    """Measure a fresh record for every registered suite (devices
+    permitting) and gate each against its committed baseline.  Returns the
+    number of failing suites."""
+    import os
+    import tempfile
+
+    import jax
+
+    names = suites or sorted(REG.all_suites())
+    fresh_dir = fresh_dir or tempfile.mkdtemp(prefix="bench_fresh_")
+    os.makedirs(fresh_dir, exist_ok=True)
+    failed = 0
+    for name in names:
+        suite = REG.get_suite(name)
+        if suite.needs_devices > len(jax.devices()):
+            print(f"[{name}] SKIPPED: needs {suite.needs_devices} devices, "
+                  f"{len(jax.devices())} visible (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count="
+                  f"{suite.needs_devices})")
+            continue
+        print(f"[{name}] measuring fresh record ...")
+        _, path = REG.run_suite(name, fast=fast,
+                                out=os.path.join(fresh_dir,
+                                                 f"BENCH_{name}.json"))
+        fresh = load_bench(path, expect_suite=name)
+        baseline = load_bench(bench_path(name), expect_suite=name)
+        failures, notes = compare_records(suite, baseline, fresh,
+                                          tolerance=tolerance)
+        if not _report(name, failures, notes, tolerance):
+            failed += 1
+    return failed
 
 
 def main(argv: list[str] | None = None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("fresh", help="freshly measured record "
-                    "(hotpath_bench --out / dist_bench --out)")
+    ap.add_argument("fresh", nargs="?", default=None,
+                    help="freshly measured record (any suite's --out)")
     ap.add_argument("--baseline", default=None,
                     help="committed baseline (default: the repo-root "
                     "BENCH_<suite>.json matching the fresh record's suite)")
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
                     help="fail when fresh is worse by this factor "
-                    "(default: %(default)s)")
+                    "(default: %(default)s; per-metric declared tolerances "
+                    "win)")
+    ap.add_argument("--run-all", action="store_true",
+                    help="measure + gate every registered suite "
+                    "(make check-regression-all)")
+    ap.add_argument("--suites", nargs="*", default=None,
+                    help="with --run-all: restrict to these suites")
+    ap.add_argument("--full", dest="fast", action="store_false",
+                    default=True, help="with --run-all: measure in --full "
+                    "mode (baselines are committed in --fast mode)")
+    ap.add_argument("--fresh-dir", default=None,
+                    help="with --run-all: write fresh records here "
+                    "(default: a temp dir)")
     args = ap.parse_args(argv)
+
+    REG.load_suites()
+    if args.run_all:
+        failed = run_all_gate(suites=args.suites, tolerance=args.tolerance,
+                              fast=args.fast, fresh_dir=args.fresh_dir)
+        if failed:
+            sys.exit(1)
+        return
+    if not args.fresh:
+        ap.error("a fresh record path is required (or pass --run-all)")
     fresh = load_bench(args.fresh)
-    suite = fresh.get("suite")
-    if suite not in _SUITES:
-        sys.exit(f"{args.fresh}: suite {suite!r} has no gate "
-                 f"(known: {sorted(_SUITES)})")
-    baseline = load_bench(args.baseline or bench_path(suite),
-                          expect_suite=suite)
-    failures, notes = _SUITES[suite](baseline, fresh,
-                                     tolerance=args.tolerance)
-    for line in notes:
-        print("  " + line)
-    if failures:
-        print(f"\nPERF REGRESSION ({len(failures)} metric(s) beyond "
-              f"{args.tolerance:.0f}x):", file=sys.stderr)
-        for line in failures:
-            print("  " + line, file=sys.stderr)
+    suite_name = fresh.get("suite")
+    try:
+        suite = REG.get_suite(suite_name)
+    except REG.BenchRegistryError as e:
+        sys.exit(f"{args.fresh}: {e}")
+    baseline = load_bench(args.baseline or bench_path(suite_name),
+                          expect_suite=suite_name)
+    failures, notes = compare_records(suite, baseline, fresh,
+                                      tolerance=args.tolerance)
+    if not _report(suite_name, failures, notes, args.tolerance):
         sys.exit(1)
-    print(f"\nperf gate OK [{suite}]: {len(notes)} metrics within "
-          f"{args.tolerance:.0f}x of baseline")
 
 
 if __name__ == "__main__":

@@ -46,12 +46,11 @@ if "xla_force_host_platform_device_count" not in \
         + f" --xla_force_host_platform_device_count={_COUNT}").strip()
 
 import dataclasses  # noqa: E402
-import time         # noqa: E402
 
 import jax          # noqa: E402  (must come after XLA_FLAGS is set)
 import numpy as np  # noqa: E402
 
-from benchmarks._emit import write_bench       # noqa: E402
+from benchmarks import registry as REG         # noqa: E402
 from repro.core import workloads as W          # noqa: E402
 from repro.core.dist.engine import make_phase_fns  # noqa: E402
 from repro.core.engine import make_executor    # noqa: E402
@@ -79,13 +78,7 @@ def exec_lane_stats(cfg, devices: int) -> dict:
 
 
 def _timed_call(fn, *args, inner=1):
-    best = float("inf")
-    for _ in range(inner):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+    return REG.timed(fn, args, reps=1, inner=inner, warm=False, check=None)
 
 
 def phase_timings(vm, params, storage, cfg, reps=1):
@@ -119,16 +112,35 @@ def phase_timings(vm, params, storage, cfg, reps=1):
 
 def _end_to_end(vm, params, storage, cfg, reps=2):
     run = make_executor(vm, cfg)
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    assert bool(res.committed)
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        res = run(params, storage)
-        res.snapshot.block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return np.asarray(res.snapshot), cfg.n_txns / float(np.median(times))
+    res, t = REG.timed(run, (params, storage), reps=reps)
+    return np.asarray(res.snapshot), cfg.n_txns / t
+
+
+def phase_cost_table(vm, params, storage, dcfg, devices: int) -> dict:
+    """Compiled-artifact accounting of the dist engine's phases, with the
+    routed-exchange collective cross-check.
+
+    Lowers the SAME shard_mapped phase callables the replay times and walks
+    their post-SPMD HLO.  The execute phase's ``all-to-all`` totals must
+    decompose into 7-array routed exchanges whose per-device bucket bytes,
+    times ``max_reads``, equal the hand-computed
+    ``routed_read_bytes_per_device`` this record has carried since PR 7 —
+    :func:`repro.obs.cost.crosscheck_routed_read_bytes` raises otherwise,
+    so a committed BENCH_dist.json certifies the compiled wire format."""
+    from repro.obs import cost as C
+    ph = make_phase_fns(vm, params, storage, dcfg)
+    state0 = ph["init"]()
+    state1, delta = ph["execute"](state0)
+    costs = C.phase_costs({
+        "execute": (ph["execute"], state0),
+        "index": (ph["index"], state1, delta),
+        "validate": (ph["validate"], ph["index"](state1, delta)),
+        "snapshot": (ph["snapshot"], state1),
+    })
+    expected = exec_lane_stats(dcfg, devices)["routed_read_bytes_per_device"]
+    costs["execute"]["routed_exchange"] = C.crosscheck_routed_read_bytes(
+        costs["execute"], devices, dcfg.max_reads, expected)
+    return costs
 
 
 def run_grid(n_txns=512, reps=1):
@@ -201,6 +213,68 @@ def run_grid(n_txns=512, reps=1):
     return record
 
 
+# ---------------------------------------------------------------------------
+# Registered suite
+# ---------------------------------------------------------------------------
+
+DIST = REG.register_suite(
+    "dist",
+    doc="multi-device engine over the regions mesh: per-wave phase timings "
+        "and dist-vs-single-device tps across device counts, with "
+        "HLO-walked collective accounting cross-checked against the "
+        "hand-computed routed-read payload",
+    needs_devices=8)
+
+
+@REG.register_benchmark(DIST, "dist_grid", impls=("dist", "single_device"))
+def _dist_grid(ctx):
+    """devices x n_locs x zipf_s grid: phase replay, e2e tps for the dist
+    and single-device engines on identical blocks, exec-partition scaling
+    headlines."""
+    reps = int(ctx.params.get("reps") or 0) or (1 if ctx.fast else 3)
+    ctx.params["reps"] = reps
+    ctx.record.update(run_grid(n_txns=ctx.size(512, 512), reps=reps))
+
+
+@REG.register_benchmark(DIST, "exchange_cost")
+def _dist_exchange_cost(ctx):
+    """Per-phase compiled-artifact costs for the largest-mesh contended
+    cell, including the all-to-all routed-exchange cross-check (raises on
+    any drift between the compiled wire format and the committed
+    structural record)."""
+    n_txns = ctx.size(512, 512)
+    d = max((x for x in (1, 2, 8) if x <= len(jax.devices())), default=1)
+    if d <= 1:
+        ctx.record["cost_skipped"] = "needs a multi-device mesh"
+        return
+    n_locs, zipf_s = 10**5, 1.1
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, n_locs=n_locs, zipf_s=zipf_s,
+        backend="sharded", n_shards=REGIONS_PER_DEVICE * d)
+    dcfg = dataclasses.replace(cfg, dist=True,
+                               mesh=make_mesh("regions", (d,)))
+    ctx.record["cost_cell"] = f"D{d}_L{n_locs}_z{zipf_s}"
+    ctx.record["cost_devices"] = d
+    ctx.record["cost"] = phase_cost_table(vm, params, storage, dcfg, d)
+
+
+REG.register_metric(DIST, "tps_dist", scope="cell")
+REG.register_metric(DIST, "tps_single_device", scope="cell")
+# Static partition quantities: pure arithmetic of (window, devices,
+# max_reads) — any drift between comparable runs is structural.
+REG.register_metric(DIST, "lanes_per_device", scope="cell",
+                    direction="exact")
+REG.register_metric(DIST, "routed_read_bytes_per_device", scope="cell",
+                    direction="exact")
+# The HLO side of the cross-check: the compiled execute phase's per-device
+# routed payload, derived from the all-to-all shapes alone.
+REG.register_metric(
+    DIST, "cost.execute.routed_exchange.routed_read_bytes_per_device_hlo",
+    direction="exact")
+REG.register_metric(DIST, "cost.execute.collective_counts.all-to-all",
+                    direction="exact")
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -215,9 +289,9 @@ def main():
                     "BENCH_dist.json (CI writes a fresh record next to the "
                     "committed baseline and gates one against the other)")
     args = ap.parse_args()
-    reps = args.reps or (1 if args.fast else 3)
-    record = run_grid(n_txns=args.n_txns, reps=reps)
-    print(f"wrote {write_bench('dist', record, out=args.out)}")
+    record, path = REG.run_suite("dist", fast=args.fast, out=args.out,
+                                 n_txns=args.n_txns, reps=args.reps)
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

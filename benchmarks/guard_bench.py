@@ -26,11 +26,10 @@ Output: ``BENCH_guard.json`` at the repo root (CI artifact + gate input).
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
-from benchmarks._emit import write_bench
+from benchmarks import registry as REG
 from repro.core import workloads as W
 from repro.core.engine import make_executor
 from repro.guard import ChaosConfig
@@ -42,18 +41,11 @@ CELL_KW = dict(n_locs=10**5, zipf_s=1.1, backend="sharded", n_shards=16)
 
 def _timed_run(vm, params, storage, cfg, reps):
     run = make_executor(vm, cfg)
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        res = run(params, storage)
-        res.snapshot.block_until_ready()
-        times.append(time.perf_counter() - t0)
-    return res, cfg.n_txns / float(np.median(times))
+    res, t = REG.timed(run, (params, storage), reps=reps)
+    return res, cfg.n_txns / t
 
 
-def run_suite(n_txns=1024, reps=3):
+def run_variants(n_txns=1024, reps=3):
     vm, params, storage, cfg = W.make_mixed_block(
         W.MixedSpec(), n_txns, seed=7, **CELL_KW)
     record = {"n_txns": n_txns, "cell": CELL, "backend": "sharded"}
@@ -90,6 +82,61 @@ def run_suite(n_txns=1024, reps=3):
     return record
 
 
+# ---------------------------------------------------------------------------
+# Registered suite
+# ---------------------------------------------------------------------------
+
+GUARD = REG.register_suite(
+    "guard",
+    doc="robustness overhead on the hotpath cell: guard levels 0/1/2, a "
+        "full chaos schedule, and the sequential degradation fallback — "
+        "identical block, byte-identical committed snapshots")
+
+
+@REG.register_benchmark(GUARD, "variants",
+                        impls=("guard0", "guard1", "guard2", "chaos",
+                               "degraded"))
+def _guard_variants(ctx):
+    """All five variants on the mirrored hotpath cell (same constructor
+    arguments, so tps_guard0 is cross-gated against BENCH_hotpath.json)."""
+    reps = int(ctx.params.get("reps") or 0) or (2 if ctx.fast else 5)
+    ctx.params["reps"] = reps
+    ctx.record.update(run_variants(n_txns=ctx.size(1024, 1024), reps=reps))
+
+
+for _name in ("tps_guard0", "tps_guard1", "tps_guard2", "tps_chaos",
+              "tps_degraded"):
+    REG.register_metric(GUARD, _name)
+
+
+def _hotpath_cross_gate(baseline, fresh, check, notes):
+    """Cross-record gate: the ``guard_level=0 / chaos=None`` throughput is
+    measured on the same block as one committed ``BENCH_hotpath.json``
+    grid cell (:data:`CELL`), so the robustness machinery landing a hidden
+    tax on the default path shows up even before the guard baseline itself
+    is regenerated."""
+    from benchmarks._emit import bench_path, load_bench
+    cell = fresh.get("cell")
+    try:
+        hotpath = load_bench(bench_path("hotpath"), expect_suite="hotpath")
+    except (OSError, ValueError) as e:
+        notes.append(f"hotpath cross-gate skipped: {e}")
+        return
+    hcell = hotpath.get("grid", {}).get(cell, {})
+    if hotpath.get("n_txns") != fresh.get("n_txns"):
+        notes.append(f"hotpath cross-gate skipped: n_txns "
+                     f"{hotpath.get('n_txns')} != {fresh.get('n_txns')}")
+    elif "tps_incremental" not in hcell:
+        notes.append(f"hotpath cross-gate skipped: no cell {cell!r} in the "
+                     f"committed BENCH_hotpath.json")
+    else:
+        check(f"hotpath:{cell}.tps_incremental vs tps_guard0",
+              float(hcell["tps_incremental"]), float(fresh["tps_guard0"]))
+
+
+GUARD.extra_gate = _hotpath_cross_gate
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -103,9 +150,8 @@ def main():
                     help="write the record here instead of the repo-root "
                     "BENCH_guard.json")
     args = ap.parse_args()
-    reps = args.reps if args.reps is not None else (2 if args.fast else 5)
-    record = run_suite(n_txns=args.n_txns, reps=reps)
-    path = write_bench("guard", record, out=args.out)
+    record, path = REG.run_suite("guard", fast=args.fast, out=args.out,
+                                 n_txns=args.n_txns, reps=args.reps or 0)
     print(f"wrote {path}  (guard2 overhead "
           f"{record['guard2_overhead_x']:.2f}x, chaos "
           f"{record['chaos_overhead_x']:.2f}x, degraded "

@@ -1,0 +1,93 @@
+"""Commit-stamped benchmark history: the repo's perf trajectory.
+
+Every registry suite run (``benchmarks.registry.run_suite``) appends one
+JSON line to ``BENCH_HISTORY.jsonl`` at the repo root:
+
+    {"sha": "<git short sha>", "dirty": bool, "suite": "hotpath",
+     "schema_rev": 3, "mode": "fast", "platform": "cpu",
+     "metrics": {"median_update_vs_build_x": 2.7, ...}}
+
+The line carries FLAT headline metrics (record-scope metric values +
+per-cell medians, extracted by ``registry.history_metrics``) so consumers
+— ``repro.obs.report --history`` (``make dashboard``) renders cross-commit
+trend tables — need only this file, not the registry or the full records.
+The committed-baseline regeneration flow therefore grows the history
+organically: rerun the suites at a new commit and the trajectory gains a
+row per suite.
+
+No wall-clock timestamp, matching ``_emit.py``: the git SHA is the
+ordering that matters, and append order preserves it within a commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from typing import Any, Optional
+
+from benchmarks import _emit
+
+#: The trajectory file at the repo root (one JSON object per line).
+HISTORY_NAME = "BENCH_HISTORY.jsonl"
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def history_path(path: Optional[str] = None) -> str:
+    return path or os.path.join(_REPO_ROOT, HISTORY_NAME)
+
+
+def git_stamp(cwd: Optional[str] = None) -> dict:
+    """``{"sha": <short sha>, "dirty": bool}`` for the repo at ``cwd``
+    (``"unknown"``/False outside a git checkout — history still appends)."""
+    cwd = cwd or _REPO_ROOT
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=cwd,
+            capture_output=True, text=True, timeout=10).stdout.strip())
+    except (OSError, subprocess.SubprocessError):
+        sha, dirty = "", False
+    return {"sha": sha or "unknown", "dirty": dirty}
+
+
+def append(record: dict, metrics: dict[str, Any],
+           path: Optional[str] = None) -> dict:
+    """Append one suite run's history line; returns the line written."""
+    line = {
+        **git_stamp(),
+        "suite": record.get("suite"),
+        "schema_rev": record.get("schema_rev"),
+        "mode": record.get("run", {}).get("mode"),
+        "platform": record.get("env", {}).get("platform"),
+        "metrics": metrics,
+    }
+    with open(history_path(path), "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    return line
+
+
+def load(path: Optional[str] = None) -> list[dict]:
+    """All history lines in append order (current-schema lines only; older
+    revisions are kept in the file but skipped with a count, mirroring the
+    ``_emit.load_bench`` handshake without refusing the whole trajectory)."""
+    p = history_path(path)
+    if not os.path.exists(p):
+        return []
+    out = []
+    with open(p) as f:
+        for raw in f:
+            raw = raw.strip()
+            if not raw:
+                continue
+            line = json.loads(raw)
+            out.append(line)
+    return out
+
+
+def partition_by_schema(lines: list[dict]) -> tuple[list[dict], int]:
+    """(current-schema lines, number of stale-schema lines skipped)."""
+    cur = [l for l in lines if l.get("schema_rev") == _emit.SCHEMA_REV]
+    return cur, len(lines) - len(cur)

@@ -26,13 +26,11 @@ artifact CI uploads per commit.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._emit import write_bench
+from benchmarks import registry as REG
 from repro.core import mv
 from repro.core import workloads as W
 from repro.core import engine as E
@@ -40,31 +38,15 @@ from repro.core.engine import make_executor
 
 
 def _timed_call(fn, *args, inner=1):
-    """Best-of-``inner`` wall-clock for one jitted call (same args).
-
-    ``inner > 1`` amortizes the nondeterministic part of dispatch overhead;
-    best-of is the right statistic for a fixed computation on a busy host.
-    """
-    best = float("inf")
-    for _ in range(inner):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+    """Best-of-``inner`` wall-clock for one jitted call (same args); the
+    shared harness with the pre-warmed-phase convention (callers warm)."""
+    return REG.timed(fn, args, reps=1, inner=inner, warm=False, check=None)
 
 
-def phase_timings(vm, params, storage, cfg, reps=3):
-    """Per-wave phase wall-clock over a full block execution.
-
-    Replays the engine loop with each phase as its own jitted function; every
-    wave state is fed to BOTH index paths, so build-vs-update is an
-    apples-to-apples comparison on identical inputs.  The index phases take
-    exactly the arrays the engine hands the backend (not the whole
-    EngineState), so per-call pytree dispatch overhead is the same small
-    constant for both.  Returns per-phase medians (milliseconds) over all
-    waves of ``reps`` replays.
-    """
+def _phase_fns(vm, params, storage, cfg):
+    """The engine's wave loop as separately-jitted phase callables — what
+    both the per-wave timing replay and the compiled-artifact cost table
+    lower (one definition, so they measure/account the same programs)."""
     backend = mv.make_backend(cfg)
 
     @jax.jit
@@ -97,6 +79,27 @@ def phase_timings(vm, params, storage, cfg, reps=3):
     @jax.jit
     def validate(state):
         return E._validate_all(state, cfg)._replace(wave=state.wave + 1)
+
+    return dict(init=init, execute=execute, index_update=index_update,
+                index_build=index_build, record_reads=record_reads,
+                validate=validate)
+
+
+def phase_timings(vm, params, storage, cfg, reps=3):
+    """Per-wave phase wall-clock over a full block execution.
+
+    Replays the engine loop with each phase as its own jitted function; every
+    wave state is fed to BOTH index paths, so build-vs-update is an
+    apples-to-apples comparison on identical inputs.  The index phases take
+    exactly the arrays the engine hands the backend (not the whole
+    EngineState), so per-call pytree dispatch overhead is the same small
+    constant for both.  Returns per-phase medians (milliseconds) over all
+    waves of ``reps`` replays.
+    """
+    fns = _phase_fns(vm, params, storage, cfg)
+    init, execute = fns["init"], fns["execute"]
+    index_update, index_build = fns["index_update"], fns["index_build"]
+    record_reads, validate = fns["record_reads"], fns["validate"]
 
     # warm every phase once (compile outside the timed loop)
     state0, delta0 = execute(init())
@@ -135,19 +138,31 @@ def phase_timings(vm, params, storage, cfg, reps=3):
 def end_to_end(vm, params, storage, cfg, reps=3):
     """Full jitted engine tps for one maintenance/validation variant."""
     run = make_executor(vm, cfg)
-    res = run(params, storage)
-    res.snapshot.block_until_ready()
-    assert bool(res.committed)
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        res = run(params, storage)
-        res.snapshot.block_until_ready()
-        times.append(time.perf_counter() - t0)
-        assert bool(res.committed)
-    t = float(np.median(times))
+    res, t = REG.timed(run, (params, storage), reps=reps)
     return dict(tps=cfg.n_txns / t, waves=int(res.waves),
                 execs=int(res.execs), val_aborts=int(res.val_aborts))
+
+
+def phase_cost_table(vm, params, storage, cfg):
+    """Compiled-artifact cost accounting for the wave loop's phases.
+
+    Lowers the SAME jitted phase callables the timing replay executes and
+    walks their post-compile HLO (trip-count-aware, see
+    :mod:`repro.obs.cost`): FLOPs, HBM bytes, and the compiler's
+    argument/output/temp memory per phase — so ``BENCH_hotpath.json``
+    carries what each phase *is*, not only what it *took*."""
+    from repro.obs import cost as C
+    fns = _phase_fns(vm, params, storage, cfg)
+    state0, delta0 = fns["execute"](fns["init"]())
+    index0 = fns["index_update"](state0.index, state0.write_locs, delta0)
+    state1 = fns["record_reads"](state0, delta0, index0)
+    return C.phase_costs({
+        "execute": (fns["execute"], state0),
+        "update": (fns["index_update"], state0.index, state0.write_locs,
+                   delta0),
+        "build": (fns["index_build"], state0.write_locs),
+        "validate": (fns["validate"], state1),
+    })
 
 
 def run_grid(n_txns=1024, reps=2, fast=True):
@@ -196,6 +211,52 @@ def run_grid(n_txns=1024, reps=2, fast=True):
     return record
 
 
+# ---------------------------------------------------------------------------
+# Registered suite
+# ---------------------------------------------------------------------------
+
+HOTPATH = REG.register_suite(
+    "hotpath",
+    doc="the wave loop opened up: per-phase timings over the shard grid "
+        "with incremental MV update vs full rebuild on identical inputs, "
+        "plus per-phase compiled-artifact cost accounting")
+
+#: The representative cell the compiled-artifact cost table lowers — the
+#: contended sharded config (1e5 locations, 16 shards, Zipf 1.1), present
+#: in both --fast and --full grids.
+COST_CELL_KW = dict(n_locs=10**5, n_shards=16, zipf_s=1.1)
+
+
+@REG.register_benchmark(HOTPATH, "hot_loop_grid",
+                        impls=("update", "rebuild"))
+def _hotpath_grid(ctx):
+    """Per-wave phase replay + end-to-end incremental-vs-rebuild over the
+    n_locs x n_shards x zipf_s grid."""
+    ctx.record.update(run_grid(n_txns=ctx.size(1024, 1024),
+                               reps=int(ctx.params.get("reps", 2)),
+                               fast=ctx.fast))
+
+
+@REG.register_benchmark(HOTPATH, "phase_cost")
+def _hotpath_phase_cost(ctx):
+    """HLO-walked FLOPs/bytes + compiler memory analysis per phase for the
+    representative contended cell (trace/compile time only)."""
+    n_txns = ctx.size(1024, 1024)
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), n_txns, seed=7, backend="sharded", **COST_CELL_KW)
+    ctx.record["cost_cell"] = \
+        f"L{COST_CELL_KW['n_locs']}_s{COST_CELL_KW['n_shards']}" \
+        f"_z{COST_CELL_KW['zipf_s']}"
+    ctx.record["cost"] = phase_cost_table(vm, params, storage, cfg)
+
+
+REG.register_metric(HOTPATH, "tps_incremental", scope="cell")
+REG.register_metric(HOTPATH, "tps_rebuild", scope="cell")
+REG.register_metric(HOTPATH, "update_vs_build_x", scope="cell")
+REG.register_metric(HOTPATH, "median_update_vs_build_x", aggregate=True)
+REG.register_metric(HOTPATH, "min_update_vs_build_x", aggregate=True)
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -212,14 +273,14 @@ def main():
                     "jax.profiler.trace into DIR (perfetto dump; the "
                     "engine's blockstm.* named scopes label the phases)")
     args = ap.parse_args()
+    kw = dict(fast=args.fast, out=args.out, n_txns=args.n_txns,
+              reps=args.reps)
     if args.profile:
         from repro.obs.profile import profile_block
         with profile_block(args.profile):
-            record = run_grid(n_txns=args.n_txns, reps=args.reps,
-                              fast=args.fast)
+            record, path = REG.run_suite("hotpath", **kw)
     else:
-        record = run_grid(n_txns=args.n_txns, reps=args.reps, fast=args.fast)
-    path = write_bench("hotpath", record, out=args.out)
+        record, path = REG.run_suite("hotpath", **kw)
     print(f"wrote {path}  (min update-vs-build "
           f"{record['min_update_vs_build_x']:.2f}x)")
 

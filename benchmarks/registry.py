@@ -1,0 +1,415 @@
+"""Unified benchmark-suite registry: one harness for every A/B in the repo.
+
+The paper's evaluation is one disciplined grid — competing engines x
+contention x thread count, every claim a measured cell (§6).  This module
+makes the repo's benchmarks the same shape: a tritonbench-style registry
+where every suite, benchmark, and metric is *declared*, and one shared
+timing harness (warmup, reps, ``block_until_ready``, the committed-snapshot
+assertion) produces every number.
+
+Three declarations:
+
+* :func:`register_suite` — a named suite owning one ``BENCH_<name>.json``
+  record (``bytecode`` / ``baselines`` / ``shards`` / ``hotpath`` / ``dist``
+  / ``guard``).  A suite is a collection of benchmarks plus the metric
+  contract its record obeys.
+* :func:`register_benchmark` — one measurement inside a suite, optionally
+  naming its competing implementations (``impls=("switch", "gather")`` for
+  the ALU A/B, ``("update", "rebuild")`` for MV maintenance, ...).  The
+  decorated function receives a :class:`RunContext` and writes into
+  ``ctx.record`` / ``ctx.rows``.
+* :func:`register_metric` — a field of the suite record with a declared
+  gate contract: direction (``higher`` / ``lower`` / ``exact``), tolerance
+  band, scope (``record`` top-level vs per-``cell`` under ``record["grid"]``,
+  dotted paths allowed), and whether it is an *aggregate* over the grid
+  (aggregates are only comparable between runs with identical run metadata
+  — ``benchmarks.check_regression`` refuses fast-vs-full with
+  :class:`~benchmarks._emit.IncomparableRunsError`).
+
+:func:`run_suite` executes a suite's benchmarks under one
+:class:`RunContext`, emits the record through the schema-versioned
+``benchmarks/_emit.py``, and appends a git-SHA-stamped line to
+``BENCH_HISTORY.jsonl`` (``benchmarks/history.py``) so every run extends
+the repo's perf trajectory.  ``benchmarks/check_regression.py`` walks the
+same metric declarations to gate every suite — there is exactly one place
+a metric's meaning is defined.
+
+    PYTHONPATH=src python -m benchmarks.registry list
+    PYTHONPATH=src python -m benchmarks.registry run hotpath --fast
+    PYTHONPATH=src python -m benchmarks.registry run --all --fast
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from benchmarks import history
+from benchmarks._emit import load_bench, write_bench
+
+
+class BenchRegistryError(ValueError):
+    """Bad registration: duplicate names, unknown suites, bad metric specs."""
+
+
+#: Modules that register the repo's suites on import (one harness for every
+#: A/B: gather-vs-switch ALU, update-vs-rebuild, dist-vs-single, guard
+#: on/off, ... — the ROADMAP's tritonbench-style consolidation).
+SUITE_MODULES = (
+    "benchmarks.engine_bench",    # bytecode, baselines, shards
+    "benchmarks.hotpath_bench",   # hotpath
+    "benchmarks.dist_bench",      # dist
+    "benchmarks.guard_bench",     # guard
+)
+
+_DIRECTIONS = ("higher", "lower", "exact")
+_SCOPES = ("record", "cell")
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """One declared field of a suite record, with its gate contract.
+
+    ``name`` is a key into the record (scope ``record``) or into each grid
+    cell (scope ``cell``); dotted names traverse nested dicts (the
+    baselines grid keeps ``{engine: {tps: ...}}`` cells, so its metrics are
+    ``"blockstm.tps"`` etc.).  ``direction='exact'`` metrics are structural
+    quantities (partition shapes, recompile counts): any drift between
+    comparable runs fails the gate outright instead of being banded.
+    """
+
+    name: str
+    direction: str = "higher"
+    tolerance: Optional[float] = None     # None -> the gate's default band
+    scope: str = "record"
+    aggregate: bool = False   # summarises the whole grid: only comparable
+    # between runs with identical run metadata (mode + params)
+
+    def __post_init__(self):
+        if self.direction not in _DIRECTIONS:
+            raise BenchRegistryError(
+                f"metric {self.name!r}: direction {self.direction!r} not in "
+                f"{_DIRECTIONS}")
+        if self.scope not in _SCOPES:
+            raise BenchRegistryError(
+                f"metric {self.name!r}: scope {self.scope!r} not in "
+                f"{_SCOPES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Benchmark:
+    """One registered measurement: ``fn(ctx)`` writing into the record."""
+
+    name: str
+    fn: Callable[["RunContext"], Any]
+    impls: tuple[str, ...] = ()   # competing implementations (A/B labels)
+    doc: str = ""
+
+
+class Suite:
+    """A named suite: benchmarks + the metric contract of its record."""
+
+    def __init__(self, name: str, doc: str = "", needs_devices: int = 1):
+        self.name = name
+        self.doc = doc
+        self.needs_devices = needs_devices   # virtual-mesh floor (dist: 8)
+        self.benchmarks: dict[str, Benchmark] = {}
+        self.metrics: dict[str, Metric] = {}
+        #: Optional extra gate hook: ``fn(baseline, fresh, check, notes)``
+        #: for suite-specific cross-record checks (the guard suite's
+        #: tps_guard0-vs-hotpath cross-gate).
+        self.extra_gate: Optional[Callable] = None
+
+    def cell_metrics(self) -> list[Metric]:
+        return [m for m in self.metrics.values() if m.scope == "cell"]
+
+    def record_metrics(self) -> list[Metric]:
+        return [m for m in self.metrics.values() if m.scope == "record"]
+
+    def __repr__(self):
+        return (f"Suite({self.name!r}, benchmarks="
+                f"{sorted(self.benchmarks)}, metrics={sorted(self.metrics)})")
+
+
+_SUITES: dict[str, Suite] = {}
+
+
+def register_suite(name: str, doc: str = "",
+                   needs_devices: int = 1) -> Suite:
+    """Declare a suite.  Duplicate names are a registration error."""
+    if name in _SUITES:
+        raise BenchRegistryError(f"suite {name!r} already registered")
+    suite = Suite(name, doc=doc, needs_devices=needs_devices)
+    _SUITES[name] = suite
+    return suite
+
+
+def get_suite(name: str) -> Suite:
+    if name not in _SUITES:
+        raise BenchRegistryError(
+            f"unknown suite {name!r} (registered: {sorted(_SUITES)})")
+    return _SUITES[name]
+
+
+def all_suites(load: bool = True) -> dict[str, Suite]:
+    """The full registry (importing :data:`SUITE_MODULES` when ``load``)."""
+    if load:
+        load_suites()
+    return dict(_SUITES)
+
+
+def load_suites() -> None:
+    """Import every suite-defining module (idempotent: modules register at
+    import time and Python caches imports)."""
+    for mod in SUITE_MODULES:
+        importlib.import_module(mod)
+
+
+def _resolve(suite: "str | Suite") -> Suite:
+    return suite if isinstance(suite, Suite) else get_suite(suite)
+
+
+def register_benchmark(suite: "str | Suite", name: Optional[str] = None,
+                       impls: tuple[str, ...] = ()):
+    """Decorator registering ``fn(ctx)`` as a benchmark of ``suite``."""
+    s = _resolve(suite)
+
+    def deco(fn):
+        bname = name or fn.__name__
+        if bname in s.benchmarks:
+            raise BenchRegistryError(
+                f"suite {s.name!r}: benchmark {bname!r} already registered")
+        s.benchmarks[bname] = Benchmark(bname, fn, tuple(impls),
+                                        doc=(fn.__doc__ or "").strip())
+        return fn
+
+    return deco
+
+
+def register_metric(suite: "str | Suite", name: str, **kw) -> Metric:
+    """Declare one gated metric of ``suite``'s record."""
+    s = _resolve(suite)
+    if name in s.metrics:
+        raise BenchRegistryError(
+            f"suite {s.name!r}: metric {name!r} already registered")
+    m = Metric(name=name, **kw)
+    s.metrics[name] = m
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Shared timing harness
+# ---------------------------------------------------------------------------
+
+def finish(res):
+    """Block on the result and enforce the committed-snapshot contract.
+
+    Every timed engine run must COMMIT — a bench that timed wave-capped,
+    uncommitted executions would be reporting throughput for work that
+    produced no state (the ``engine_bench._run_engine`` assertion, now the
+    one harness-wide rule)."""
+    res.snapshot.block_until_ready()
+    assert bool(res.committed), "timed run did not commit its block"
+    return res
+
+
+def timed(fn, args, reps: int = 2, inner: int = 1, warm: bool = True,
+          check: Optional[Callable] = finish):
+    """Median wall-clock of ``reps`` calls of ``fn(*args)`` (same args).
+
+    Compiles/warms once outside the timed region; ``inner > 1`` takes the
+    best of ``inner`` back-to-back calls per rep (amortizing host dispatch
+    jitter for sub-millisecond jitted phases — the hotpath/dist per-phase
+    convention); ``check`` post-processes every result (default: the
+    committed-snapshot assertion; pass ``jax.block_until_ready`` for
+    results that are bare arrays/pytrees)."""
+    import jax
+
+    done = check if check is not None else jax.block_until_ready
+    if warm:
+        done(fn(*args))
+    times = []
+    out = None
+    for _ in range(max(reps, 1)):
+        best = float("inf")
+        for _ in range(max(inner, 1)):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            done(out)
+            best = min(best, time.perf_counter() - t0)
+        times.append(best)
+    return out, float(np.median(times))
+
+
+def timed_blocks(run, make_args: Callable[[int], tuple], reps: int = 3,
+                 check: Callable = finish):
+    """Median wall-clock over ``reps`` FRESH blocks (``make_args(r)`` builds
+    rep ``r``'s arguments; rep 0 compiles+warms untimed).  Each timed rep
+    must pass ``check`` — the harness, not the caller, owns the
+    committed-snapshot rule."""
+    res = check(run(*make_args(0)))
+    times = []
+    for r in range(max(reps, 1)):
+        args = make_args(r + 1)
+        t0 = time.perf_counter()
+        res = run(*args)
+        check(res)
+        times.append(time.perf_counter() - t0)
+    return res, float(np.median(times))
+
+
+# ---------------------------------------------------------------------------
+# Running a suite
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunContext:
+    """What a benchmark function receives: mode, grid params, and the
+    record/rows it writes into."""
+
+    fast: bool = True
+    params: dict = dataclasses.field(default_factory=dict)
+    record: dict = dataclasses.field(default_factory=dict)
+    rows: list = dataclasses.field(default_factory=list)
+
+    @property
+    def mode(self) -> str:
+        return "fast" if self.fast else "full"
+
+    def size(self, fast_default: int, full_default: int,
+             key: str = "n_txns") -> int:
+        """The block size for this run: an explicit CLI/grid param wins,
+        otherwise the suite's per-mode default.  Whatever is used is
+        stamped into ``params`` so the record's run metadata names the
+        actual grid (the fast-vs-full aggregate-comparison guard)."""
+        n = self.params.get(key)
+        if n is None:
+            n = fast_default if self.fast else full_default
+        self.params[key] = int(n)
+        return int(n)
+
+
+def history_metrics(suite: Suite, record: dict) -> dict:
+    """Flat headline metrics for one history line: every record-scope
+    metric present, plus the median over grid cells of every cell-scope
+    metric (so the trajectory table has one number per metric per run)."""
+    out: dict[str, Any] = {}
+    for m in suite.record_metrics():
+        v = _dig(record, m.name)
+        if v is not None:
+            out[m.name] = v
+    cells = [c for c in record.get("grid", {}).values()
+             if isinstance(c, dict) and "error" not in c]
+    for m in suite.cell_metrics():
+        vals = [_dig(c, m.name) for c in cells]
+        vals = [v for v in vals if isinstance(v, (int, float))]
+        if vals:
+            key = f"median_{m.name.replace('.', '_')}"
+            out[key] = (float(np.median(vals)) if m.direction != "exact"
+                        else vals[0] if len(set(vals)) == 1 else None)
+            if out[key] is None:
+                del out[key]
+    return out
+
+
+def _dig(d: dict, dotted: str):
+    """Nested lookup by dotted path; None when any hop is missing."""
+    cur: Any = d
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def run_suite(name: str, fast: bool = True, out: Optional[str] = None,
+              append_history: bool = True,
+              history_path: Optional[str] = None,
+              benchmarks: Optional[list[str]] = None,
+              rows: Optional[list] = None,
+              **params) -> tuple[dict, str]:
+    """Run one suite's registered benchmarks under the shared harness.
+
+    Returns ``(record, path)``.  The record is emitted through
+    ``_emit.write_bench`` with run metadata (mode + grid params) stamped,
+    and a history line is appended unless ``append_history=False``.
+    ``rows``, when given, collects the benchmarks' CSV rows (the
+    engine_bench CLI's figure-table output)."""
+    suite = get_suite(name)
+    ctx = RunContext(fast=fast, params=dict(params))
+    if rows is not None:
+        ctx.rows = rows
+    for bname, bench in suite.benchmarks.items():
+        if benchmarks is not None and bname not in benchmarks:
+            continue
+        bench.fn(ctx)
+    path = write_bench(suite.name, ctx.record, out=out, mode=ctx.mode,
+                       params=ctx.params)
+    record = load_bench(path)        # the stamped record, as consumers see it
+    if append_history:
+        history.append(record, history_metrics(suite, record),
+                       path=history_path)
+    return record, path
+
+
+def main(argv: Optional[list[str]] = None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("list", help="print every registered suite / benchmark "
+                   "/ metric")
+    rp = sub.add_parser("run", help="run suites through the shared harness")
+    rp.add_argument("suites", nargs="*", help="suite names (see `list`)")
+    rp.add_argument("--all", action="store_true",
+                    help="run every registered suite (devices permitting)")
+    rp.add_argument("--fast", action="store_true", default=True)
+    rp.add_argument("--full", dest="fast", action="store_false")
+    rp.add_argument("--out", default=None,
+                    help="write records under this dir instead of the "
+                    "repo-root BENCH_<suite>.json baselines")
+    rp.add_argument("--no-history", dest="history", action="store_false",
+                    default=True, help="do not append BENCH_HISTORY.jsonl "
+                    "lines")
+    args = ap.parse_args(argv)
+
+    load_suites()
+    if args.cmd == "list":
+        for name, suite in sorted(_SUITES.items()):
+            print(f"{name}: {suite.doc}")
+            for b in suite.benchmarks.values():
+                ab = f"  [{' vs '.join(b.impls)}]" if b.impls else ""
+                print(f"  bench  {b.name}{ab}")
+            for m in suite.metrics.values():
+                tol = "exact" if m.direction == "exact" else \
+                    f"{m.direction}, {m.tolerance or 'default'}x"
+                agg = ", aggregate" if m.aggregate else ""
+                print(f"  metric {m.name} ({m.scope}; {tol}{agg})")
+        return
+
+    import jax
+    names = sorted(_SUITES) if args.all else args.suites
+    if not names:
+        raise SystemExit("no suites named (or pass --all)")
+    for name in names:
+        suite = get_suite(name)
+        if suite.needs_devices > len(jax.devices()):
+            print(f"[{name}] SKIPPED: needs {suite.needs_devices} devices, "
+                  f"{len(jax.devices())} visible (set XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count="
+                  f"{suite.needs_devices})")
+            continue
+        record, path = run_suite(name, fast=args.fast, out=args.out,
+                                 append_history=args.history)
+        print(f"[{name}] wrote {path} "
+              f"({len(record.get('grid', {}))} grid cells)")
+
+
+if __name__ == "__main__":
+    # `python -m benchmarks.registry` runs this file as __main__ while the
+    # suite modules import (and register into) the canonical
+    # `benchmarks.registry` instance — delegate to that one.
+    from benchmarks.registry import main as _canonical_main
+    _canonical_main()

@@ -6,7 +6,8 @@ Proves the distribution config is coherent without hardware: for every
 (architecture × input shape) the production train/serve step is
 ``.lower().compile()``d against the 16x16 single-pod mesh AND the 2x16x16
 multi-pod mesh, printing memory and cost analysis and recording roofline
-inputs to JSON (read by benchmarks/roofline.py and EXPERIMENTS.md).
+inputs to JSON (``drylib.roofline`` terms; per-phase accounting for the
+engine suites lives in ``repro.obs.cost``).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \

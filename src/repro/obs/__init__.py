@@ -11,8 +11,12 @@ Three layers (see README.md in this package):
   (``jax.profiler.TraceAnnotation``) and the ``jax.profiler.trace``
   context manager behind ``make profile`` (perfetto-compatible dump).
 * :mod:`repro.obs.export` / :mod:`repro.obs.report` — Chrome-trace JSON
-  export and the wave-table / abort-chain report CLI behind
-  ``make report``.
+  export and the wave-table / abort-chain / perf-history report CLI behind
+  ``make report`` / ``make dashboard``.
+* :mod:`repro.obs.cost`    — compiled-artifact cost accounting: per-phase
+  FLOPs / HBM / collective bytes via the trip-count-aware HLO walker,
+  ``memory_analysis()``, the routed-exchange collective cross-check, and
+  the jit-cache-miss counter (consumed by the benchmark registry).
 """
 from __future__ import annotations
 
@@ -22,13 +26,13 @@ from repro.obs.trace import (NO_TXN, ValTraceAux, WaveTrace, init_trace,
 
 __all__ = ["NO_TXN", "ValTraceAux", "WaveTrace", "init_trace",
            "merge_device_traces", "record_execute", "record_index",
-           "record_validate", "export", "profile", "report"]
+           "record_validate", "cost", "export", "profile", "report"]
 
 
 def __getattr__(name):
     # The host-side layers (numpy/profiler imports) load lazily so the
     # engine's in-jit hook path pays only for repro.obs.trace.
-    if name in ("export", "profile", "report"):
+    if name in ("cost", "export", "profile", "report"):
         import importlib
         return importlib.import_module(f"repro.obs.{name}")
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

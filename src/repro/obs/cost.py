@@ -1,0 +1,168 @@
+"""Compiled-artifact cost accounting for the engine's phases.
+
+The wave loop has been *timed* since PR 6; this module *accounts* it:
+FLOPs, HBM traffic, and collective bytes read off the compiled XLA
+artifact, plus the compiler's own memory analysis and a jit-cache-miss
+counter.  Three sources:
+
+* :func:`jit_cost` / :func:`compiled_cost` — ``fn.lower(*args).compile()``
+  walked by the trip-count-aware HLO walker
+  (:mod:`repro.launch.hlo_analysis`), which multiplies ``while`` bodies by
+  their ``known_trip_count`` — ``compiled.cost_analysis()`` counts every
+  loop body ONCE, so the bytecode interpreter's ``lax.scan`` (and the wave
+  ``while_loop`` when a whole block executor is lowered) would be
+  undercounted by the trip count without it.  ``memory_analysis()``
+  argument/output/temp sizes ride along.
+* :func:`routed_exchange_stats` / :func:`crosscheck_routed_read_bytes` —
+  the dist execute phase's collective accounting.  Each routed read site
+  compiles to exactly :data:`A2A_ARRAYS_PER_EXCHANGE` ``all-to-all`` ops
+  (2 query-leg arrays: loc + reader, both i32; 5 answer-leg arrays: the
+  ``ReadResolution`` found/writer/slot/incarnation/is_estimate fields), so
+  the walker's all-to-all totals decompose exactly into
+  ``n_exchanges x devices x lanes_per_device x 22 B`` — and the
+  hand-computed ``routed_read_bytes_per_device`` that ``BENCH_dist.json``
+  has carried since PR 7 must equal the HLO-derived per-device bucket
+  bytes times ``max_reads``.  The cross-check turns that committed
+  constant from an asserted formula into a measured property of the
+  compiled artifact.
+* :func:`cache_misses` — recompile accounting for a jitted callable, so
+  "zero recompiles across mixes" is a gated registry metric
+  (``jit_cache_misses == 0``, direction ``exact``) rather than only a
+  test-suite assertion.
+
+Everything here runs at trace/compile time — no benchmark execution — so
+suites can stamp cost fields into their records for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+from repro.launch.hlo_analysis import COLLECTIVES, aggregate
+
+#: HLO ``all-to-all`` ops emitted per routed read exchange (see
+#: :meth:`repro.core.dist.backend.DistShardedBackend._route_chunk`): the
+#: query leg routes 2 i32 arrays (loc, reader), the answer leg routes the
+#: 5 ``ReadResolution`` fields (found u8, writer i32, slot i32,
+#: incarnation i32, is_estimate u8) back.
+A2A_ARRAYS_PER_EXCHANGE = 7
+
+#: Live payload bytes one routed read moves end to end: 8 B query out +
+#: 14 B ``ReadResolution`` back (the PR 7 ``dist_bench.ROUTED_READ_BYTES``
+#: constant, re-derived here from the exchange structure: the 7 routed
+#: arrays carry 4+4 query + 1+4+4+4+1 answer bytes per slot).
+ROUTED_READ_BYTES = (4 + 4) + (1 + 4 + 4 + 4 + 1)
+
+
+def compiled_cost(compiled) -> dict:
+    """Cost record for one compiled artifact.
+
+    ``flops`` / ``hbm_bytes`` / per-collective bytes+counts come from the
+    trip-count-aware HLO walk (per-device quantities in post-SPMD HLO);
+    ``memory`` from ``compiled.memory_analysis()`` (argument / output /
+    temp / generated-code bytes — ``peak_bytes`` is their live-at-once
+    proxy ``args + out + temp``, what the compiler reserves for one
+    call)."""
+    t = aggregate(compiled.as_text())
+    cost = {
+        "flops": float(t["flops"]),
+        "hbm_bytes": float(t["bytes"]),
+        "collective_bytes": float(t["collective_bytes"]),
+        "collectives": {k: float(t[k]) for k in COLLECTIVES},
+        "collective_counts": {k: int(t[f"n_{k}"]) for k in COLLECTIVES},
+    }
+    mem = None
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:           # backends without the query keep cost useful
+        pass
+    if mem is not None:
+        args_b = int(getattr(mem, "argument_size_in_bytes", 0) or 0)
+        out_b = int(getattr(mem, "output_size_in_bytes", 0) or 0)
+        tmp_b = int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        cost["memory"] = {
+            "argument_bytes": args_b,
+            "output_bytes": out_b,
+            "temp_bytes": tmp_b,
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0) or 0),
+            "peak_bytes": args_b + out_b + tmp_b,
+        }
+    return cost
+
+
+def jit_cost(fn: Callable, *args, **kw) -> dict:
+    """Lower+compile a jitted callable and account it (no execution)."""
+    return compiled_cost(fn.lower(*args, **kw).compile())
+
+
+def phase_costs(phases: Mapping[str, tuple]) -> dict[str, dict]:
+    """Account several phases at once: ``{name: (jitted_fn, args...)}`` ->
+    ``{name: cost_record}`` (the hotpath/dist suites' per-phase tables)."""
+    return {name: jit_cost(spec[0], *spec[1:])
+            for name, spec in phases.items()}
+
+
+def cache_misses(fn: Callable, expected_compiles: int = 1) -> int:
+    """Recompiles beyond ``expected_compiles`` for a jitted callable.
+
+    ``make_executor``'s contract is compile-once-serve-every-mix; after a
+    suite has served all its mixes, ``cache_misses(run) == 0`` is the
+    zero-recompile property as a number the regression gate can hold at
+    exactly 0.  Returns -1 when the callable exposes no jit cache (a
+    non-jitted wrapper) so the gap is visible rather than silently 0."""
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        return -1
+    return int(size()) - int(expected_compiles)
+
+
+# ---------------------------------------------------------------------------
+# Routed-exchange collective accounting (dist execute phase)
+# ---------------------------------------------------------------------------
+
+def routed_exchange_stats(cost: dict, devices: int) -> dict:
+    """Decompose an execute-phase cost record's all-to-all totals.
+
+    Returns ``n_exchanges`` (routed read sites x loop trips),
+    ``bytes_per_exchange`` (all devices' buckets, both legs), and
+    ``bucket_bytes_per_device`` (one device's slot payload per exchange =
+    ``lanes_per_device x 22 B``).  Raises ``ValueError`` when the op count
+    does not decompose into whole exchanges — the compiled artifact then
+    has a different collective structure than the routed resolver emits,
+    which is exactly what the cross-check exists to catch."""
+    n_ops = int(cost["collective_counts"]["all-to-all"])
+    total = float(cost["collectives"]["all-to-all"])
+    if n_ops <= 0 or n_ops % A2A_ARRAYS_PER_EXCHANGE:
+        raise ValueError(
+            f"{n_ops} all-to-all ops do not decompose into "
+            f"{A2A_ARRAYS_PER_EXCHANGE}-array routed exchanges")
+    n_exchanges = n_ops // A2A_ARRAYS_PER_EXCHANGE
+    per_exchange = total / n_exchanges
+    return {
+        "n_exchanges": n_exchanges,
+        "bytes_per_exchange": per_exchange,
+        "bucket_bytes_per_device": per_exchange / devices,
+    }
+
+
+def crosscheck_routed_read_bytes(cost: dict, devices: int, max_reads: int,
+                                 expected_per_device: int) -> dict:
+    """Check the HLO-derived routed payload against the hand-computed one.
+
+    ``expected_per_device`` is ``BENCH_dist.json``'s
+    ``routed_read_bytes_per_device`` (``lanes_per_device x max_reads x
+    22``).  The HLO side derives the same quantity with no hand formula:
+    one exchange's per-device bucket bytes (``lanes x 22``, read off the
+    compiled all-to-all shapes) times the ``max_reads`` read sites each
+    lane resolves.  Exact integer agreement or ``ValueError`` — a drift
+    means the routed exchange's wire format and the committed structural
+    record no longer describe the same engine."""
+    stats = routed_exchange_stats(cost, devices)
+    hlo_derived = stats["bucket_bytes_per_device"] * max_reads
+    if round(hlo_derived) != int(expected_per_device):
+        raise ValueError(
+            f"HLO-derived routed read bytes/device {hlo_derived:.1f} != "
+            f"hand-computed {expected_per_device} "
+            f"(exchange stats: {stats})")
+    return {**stats, "routed_read_bytes_per_device_hlo": int(
+        round(hlo_derived))}

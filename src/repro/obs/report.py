@@ -1,4 +1,4 @@
-"""Wave-table / abort-chain CLI over a serialized wave trace.
+"""Wave-table / abort-chain / perf-history CLI.
 
 Renders the ``wave-trace JSON`` written by :mod:`repro.obs.export` (e.g.
 ``WAVE_TRACE.json`` from ``benchmarks/engine_bench --trace``, or
@@ -13,10 +13,19 @@ Renders the ``wave-trace JSON`` written by :mod:`repro.obs.export` (e.g.
   always point to lower txn ids (preset order), so the edge set is a DAG
   and chain depth is exact, not heuristic.
 
+``--history`` (``make dashboard``) instead renders the commit-stamped
+perf trajectory ``BENCH_HISTORY.jsonl`` (appended by every
+``benchmarks.registry`` suite run) as one cross-commit trend table per
+suite.  The lines carry flat pre-extracted headline metrics, so this
+module needs only the file — not the benchmark registry (src never
+imports benchmarks).
+
     PYTHONPATH=src python -m repro.obs.report WAVE_TRACE.json --chains 5
+    PYTHONPATH=src python -m repro.obs.report --history
 """
 from __future__ import annotations
 
+import json
 import sys
 from typing import Mapping
 
@@ -128,20 +137,96 @@ def render(d: Mapping, max_rows: int = 0, chains: int = 5) -> str:
                       abort_chains(d, top=chains)])
 
 
+# ---------------------------------------------------------------------------
+# Perf-history trend tables (make dashboard)
+# ---------------------------------------------------------------------------
+
+#: Default trajectory file (written by benchmarks.registry at the repo
+#: root; `make dashboard` runs from there).
+HISTORY_DEFAULT = "BENCH_HISTORY.jsonl"
+
+
+def load_history(path: str = HISTORY_DEFAULT) -> list[dict]:
+    """All history lines in append order (skips blank lines)."""
+    with open(path) as f:
+        return [json.loads(raw) for raw in f if raw.strip()]
+
+
+def _fmt_metric(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def history_tables(lines: list[dict]) -> str:
+    """One cross-commit trend table per suite, rows in append (= commit)
+    order.  Metric columns are the union over the suite's lines in first-
+    appearance order, so a metric added later shows as ``-`` for older
+    rows rather than hiding history."""
+    if not lines:
+        return ("no history lines — run a suite first "
+                "(PYTHONPATH=src python -m benchmarks.registry run --all)")
+    by_suite: dict[str, list[dict]] = {}
+    for line in lines:
+        by_suite.setdefault(str(line.get("suite")), []).append(line)
+    out: list[str] = []
+    for suite in sorted(by_suite):
+        runs = by_suite[suite]
+        cols: list[str] = []
+        for line in runs:
+            for k in line.get("metrics", {}):
+                if k not in cols:
+                    cols.append(k)
+        header = ["sha", "rev", "mode", "platform"] + cols
+        rows = [header]
+        for line in runs:
+            sha = str(line.get("sha", "?"))
+            if line.get("dirty"):
+                sha += "*"
+            m = line.get("metrics", {})
+            rows.append([sha, str(line.get("schema_rev", "?")),
+                         str(line.get("mode", "?")),
+                         str(line.get("platform", "?"))]
+                        + [_fmt_metric(m[k]) if k in m else "-"
+                           for k in cols])
+        widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+        table = "\n".join("  ".join(c.rjust(widths[i])
+                                    for i, c in enumerate(r)) for r in rows)
+        out.append(f"[{suite}] {len(runs)} run(s)   (* = dirty worktree)\n"
+                   f"{table}")
+    return "\n\n".join(out)
+
+
 def main(argv: list[str] | None = None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("path", nargs="?", default="WAVE_TRACE.json",
-                    help="wave-trace JSON (default: WAVE_TRACE.json)")
+    ap.add_argument("path", nargs="?", default=None,
+                    help="wave-trace JSON (default: WAVE_TRACE.json), or "
+                    "the history JSONL with --history (default: "
+                    f"{HISTORY_DEFAULT})")
     ap.add_argument("--rows", type=int, default=0,
                     help="max wave rows to print (0 = all)")
     ap.add_argument("--chains", type=int, default=5,
                     help="abort chains / top blockers to show")
+    ap.add_argument("--history", action="store_true",
+                    help="render the commit-stamped benchmark trajectory "
+                    "as cross-commit trend tables (make dashboard)")
     args = ap.parse_args(argv)
+    if args.history:
+        path = args.path or HISTORY_DEFAULT
+        try:
+            lines = load_history(path)
+        except FileNotFoundError:
+            sys.exit(f"{path} not found — run a registry suite first "
+                     f"(PYTHONPATH=src python -m benchmarks.registry "
+                     f"run --all)")
+        print(history_tables(lines))
+        return
+    path = args.path or "WAVE_TRACE.json"
     try:
-        d = load_wave_trace(args.path)
+        d = load_wave_trace(path)
     except FileNotFoundError:
-        sys.exit(f"{args.path} not found — generate one with "
+        sys.exit(f"{path} not found — generate one with "
                  f"`PYTHONPATH=src python -m benchmarks.engine_bench "
                  f"--workload mixed --trace`")
     print(render(d, max_rows=args.rows, chains=args.chains))

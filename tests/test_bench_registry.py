@@ -1,0 +1,435 @@
+"""Benchmark-observatory suite: registry, gate, history, cost accounting.
+
+* Registration — suites/benchmarks/metrics declare once; duplicate names
+  and bad metric specs are registration errors, and importing the repo's
+  suite modules yields all six suites with non-empty contracts.
+* Gate — ``benchmarks.check_regression.compare_records`` on SYNTHETIC
+  records: banded pass/fail in both directions, exact-metric drift,
+  grid-drift notes, int32-refusal flips, vanished metrics, and the
+  fast-vs-full aggregate refusal (:class:`IncomparableRunsError`).
+* History — append/load round-trip of the commit-stamped trajectory
+  lines, stale-schema partitioning, and the dashboard's trend-table
+  renderer (``repro.obs.report``).
+* Cost — ``repro.obs.cost``'s routed-exchange decomposition on synthetic
+  cost records, plus the real thing: the dist execute phase is lowered on
+  a 2-device mesh and its HLO-walked all-to-all bytes must reproduce the
+  hand-computed ``routed_read_bytes_per_device`` exactly.
+
+The mesh half needs ``--xla_force_host_platform_device_count=2`` BEFORE
+jax initializes, which a shared pytest process cannot guarantee — so when
+this process has fewer than 2 devices,
+:func:`test_bench_suite_under_virtual_mesh` re-runs this file in a
+subprocess with the flag set (the ``tests/test_dist.py`` convention).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import jax
+
+from benchmarks import history
+from benchmarks import registry as REG
+from benchmarks._emit import (SCHEMA_REV, IncomparableRunsError, load_bench,
+                              write_bench)
+from benchmarks.check_regression import compare_records
+
+jax.config.update("jax_platform_name", "cpu")
+
+REQUIRED = 2
+_FLAG = f"--xla_force_host_platform_device_count={REQUIRED}"
+
+needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < REQUIRED,
+    reason=f"needs {REQUIRED} virtual devices (XLA_FLAGS={_FLAG}); "
+    f"covered via the subprocess runner")
+
+
+# ---------------------------------------------------------------------------
+# Subprocess runner: tier-1 coverage without process-wide XLA flags
+# ---------------------------------------------------------------------------
+
+def test_bench_suite_under_virtual_mesh():
+    if len(jax.devices()) >= REQUIRED:
+        pytest.skip("already on a virtual mesh; suite runs directly")
+    env = dict(os.environ, XLA_FLAGS=_FLAG, JAX_PLATFORMS="cpu")
+    env.setdefault("REPRO_FAST_EXAMPLES", "2")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q", __file__],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=3000)
+    assert r.returncode == 0, \
+        f"bench-registry suite failed under {_FLAG}:\n{r.stdout[-4000:]}\n" \
+        f"{r.stderr[-2000:]}"
+
+
+# ---------------------------------------------------------------------------
+# Registration contract
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def scratch_suite():
+    name = "_scratch"
+    suite = REG.register_suite(name, doc="test-only suite")
+    try:
+        yield suite
+    finally:
+        REG._SUITES.pop(name, None)
+
+
+def test_duplicate_suite_rejected(scratch_suite):
+    with pytest.raises(REG.BenchRegistryError, match="already registered"):
+        REG.register_suite(scratch_suite.name)
+
+
+def test_benchmark_registration_and_duplicate(scratch_suite):
+    @REG.register_benchmark(scratch_suite, "ab", impls=("left", "right"))
+    def _ab(ctx):
+        """One A/B."""
+
+    b = scratch_suite.benchmarks["ab"]
+    assert b.impls == ("left", "right")
+    assert b.doc == "One A/B."
+    with pytest.raises(REG.BenchRegistryError, match="already registered"):
+        REG.register_benchmark(scratch_suite, "ab")(lambda ctx: None)
+
+
+def test_metric_registration_and_validation(scratch_suite):
+    m = REG.register_metric(scratch_suite, "tps", tolerance=5.0)
+    assert m.direction == "higher" and m.scope == "record"
+    with pytest.raises(REG.BenchRegistryError, match="already registered"):
+        REG.register_metric(scratch_suite, "tps")
+    with pytest.raises(REG.BenchRegistryError, match="direction"):
+        REG.register_metric(scratch_suite, "bad", direction="sideways")
+    with pytest.raises(REG.BenchRegistryError, match="scope"):
+        REG.register_metric(scratch_suite, "bad", scope="galaxy")
+    with pytest.raises(REG.BenchRegistryError, match="unknown suite"):
+        REG.get_suite("_no_such_suite")
+
+
+def test_all_repo_suites_register():
+    suites = REG.all_suites()
+    assert {"bytecode", "baselines", "shards", "hotpath", "dist",
+            "guard"} <= set(suites)
+    for s in suites.values():
+        assert s.benchmarks, f"suite {s.name} has no benchmarks"
+        assert s.metrics, f"suite {s.name} has no gated metrics"
+    assert suites["dist"].needs_devices == 8
+    assert suites["guard"].extra_gate is not None
+
+
+def test_dig_dotted_paths():
+    d = {"a": {"b": {"c": 3}}, "x": 1}
+    assert REG._dig(d, "a.b.c") == 3
+    assert REG._dig(d, "x") == 1
+    assert REG._dig(d, "a.b.missing") is None
+    assert REG._dig(d, "x.deeper") is None
+
+
+# ---------------------------------------------------------------------------
+# Gate semantics on synthetic records (no benchmark execution)
+# ---------------------------------------------------------------------------
+
+def _toy_suite(aggregate=False):
+    s = REG.Suite("toy")
+    s.metrics = {
+        "tps": REG.Metric("tps"),
+        "overhead_x": REG.Metric("overhead_x", direction="lower"),
+        "misses": REG.Metric("misses", direction="exact"),
+        "sub.tps": REG.Metric("sub.tps", scope="cell"),
+        "waves": REG.Metric("waves", direction="exact", scope="cell"),
+    }
+    if aggregate:
+        s.metrics["median_x"] = REG.Metric("median_x", aggregate=True)
+    return s
+
+
+def _rec(run=None, **kw):
+    rec = {"suite": "toy", "schema_rev": SCHEMA_REV,
+           "run": run or {"mode": "fast", "params": {"n": 4}},
+           "tps": 1000.0, "overhead_x": 2.0, "misses": 0,
+           "grid": {"c0": {"sub": {"tps": 500.0}, "waves": 3}}}
+    rec.update(kw)
+    return rec
+
+
+def test_gate_identical_records_pass():
+    failures, notes = compare_records(_toy_suite(), _rec(), _rec())
+    assert not failures
+    assert any("waves" in n for n in notes)   # exact metrics reported
+
+
+def test_gate_banded_regressions_both_directions():
+    # higher-is-better collapsing 20x fails; 2x is inside the 10x band
+    failures, _ = compare_records(_toy_suite(), _rec(), _rec(tps=50.0))
+    assert any("tps" in f and "regression" in f for f in failures)
+    failures, _ = compare_records(_toy_suite(), _rec(), _rec(tps=500.0))
+    assert not failures
+    # lower-is-better blowing up 20x fails; improving never fails
+    failures, _ = compare_records(_toy_suite(), _rec(),
+                                  _rec(overhead_x=40.0))
+    assert any("overhead_x" in f for f in failures)
+    failures, _ = compare_records(_toy_suite(), _rec(),
+                                  _rec(overhead_x=0.1))
+    assert not failures
+    # per-metric tolerance wins over the default band
+    s = _toy_suite()
+    s.metrics["tps"] = REG.Metric("tps", tolerance=2.0)
+    failures, _ = compare_records(s, _rec(), _rec(tps=400.0))
+    assert any("tps" in f for f in failures)
+
+
+def test_gate_exact_metrics_fail_on_any_drift():
+    failures, _ = compare_records(_toy_suite(), _rec(), _rec(misses=1))
+    assert any("misses" in f and "structural drift" in f for f in failures)
+    fresh = _rec()
+    fresh["grid"]["c0"]["waves"] = 4
+    failures, _ = compare_records(_toy_suite(), _rec(), fresh)
+    assert any("c0.waves" in f for f in failures)
+    # ... but only between comparable runs
+    fresh["run"] = {"mode": "full", "params": {"n": 64}}
+    failures, notes = compare_records(_toy_suite(), _rec(), fresh)
+    assert not failures
+    assert any("not comparable" in n for n in notes)
+
+
+def test_gate_dotted_cell_metric():
+    fresh = _rec()
+    fresh["grid"]["c0"]["sub"] = {"tps": 10.0}    # 50x cell collapse
+    failures, _ = compare_records(_toy_suite(), _rec(), fresh)
+    assert any("c0.sub.tps" in f for f in failures)
+
+
+def test_gate_grid_drift_noted_not_failed():
+    fresh = _rec()
+    fresh["grid"]["c1"] = {"sub": {"tps": 1.0}, "waves": 9}
+    failures, notes = compare_records(_toy_suite(), _rec(), fresh)
+    assert not failures
+    assert any("grid drift" in n for n in notes)
+
+
+def test_gate_refusal_flip_fails_when_comparable():
+    fresh = _rec()
+    fresh["grid"]["c0"] = {"error": "int32 key bound exceeded"}
+    failures, _ = compare_records(_toy_suite(), _rec(), fresh)
+    assert any("refusal state changed" in f for f in failures)
+    fresh["run"] = {"mode": "full", "params": {}}
+    failures, notes = compare_records(_toy_suite(), _rec(), fresh)
+    assert not failures
+    assert any("refusal state changed" in n for n in notes)
+
+
+def test_gate_vanished_metric_fails_new_metric_notes():
+    fresh = _rec()
+    del fresh["tps"]
+    failures, _ = compare_records(_toy_suite(), _rec(), fresh)
+    assert any("missing in fresh" in f for f in failures)
+    base = _rec()
+    del base["tps"]
+    failures, notes = compare_records(_toy_suite(), base, _rec())
+    assert not failures
+    assert any("new metric" in n for n in notes)
+
+
+def test_gate_refuses_incomparable_aggregates():
+    base = _rec(median_x=3.0)
+    fresh = _rec(median_x=3.0,
+                 run={"mode": "full", "params": {"n": 4096}})
+    with pytest.raises(IncomparableRunsError, match="median_x"):
+        compare_records(_toy_suite(aggregate=True), base, fresh)
+    # without aggregates the same pair is gated (band metrics only)
+    failures, _ = compare_records(_toy_suite(), base, fresh)
+    assert not failures
+
+
+# ---------------------------------------------------------------------------
+# Emitter + history round-trips
+# ---------------------------------------------------------------------------
+
+def test_emit_schema_handshake(tmp_path):
+    path = write_bench("toy", {"tps": 1.0}, out=str(tmp_path / "r.json"),
+                       mode="fast", params={"n": 4})
+    rec = load_bench(path, expect_suite="toy")
+    assert rec["schema_rev"] == SCHEMA_REV
+    assert rec["run"] == {"mode": "fast", "params": {"n": 4}}
+    assert rec["env"]["device_count"] == len(jax.devices())
+    with pytest.raises(ValueError, match="expected 'other'"):
+        load_bench(path, expect_suite="other")
+    rec["schema_rev"] = SCHEMA_REV - 1
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps(rec))
+    with pytest.raises(ValueError, match="schema_rev"):
+        load_bench(str(stale))
+
+
+def test_unstamped_record_never_comparable(tmp_path):
+    stamped = load_bench(write_bench(
+        "toy", {"tps": 1.0}, out=str(tmp_path / "a.json"), mode="fast"))
+    raw = load_bench(write_bench(
+        "toy", {"tps": 1.0}, out=str(tmp_path / "b.json")))
+    assert raw["run"]["mode"] == "unknown"
+    s = _toy_suite(aggregate=True)
+    with pytest.raises(IncomparableRunsError):
+        compare_records(s, stamped, raw)
+
+
+def test_history_round_trip_and_schema_partition(tmp_path):
+    p = str(tmp_path / "hist.jsonl")
+    with open(p, "w") as f:     # one stale-schema line already present
+        f.write(json.dumps({"schema_rev": SCHEMA_REV - 1,
+                            "suite": "toy", "metrics": {}}) + "\n")
+    line = history.append(_rec(), {"tps": 1000.0}, path=p)
+    assert line["suite"] == "toy" and line["mode"] == "fast"
+    assert line["sha"]          # stamped inside a git checkout
+    lines = history.load(p)
+    assert len(lines) == 2 and lines[-1] == line
+    cur, stale = history.partition_by_schema(lines)
+    assert stale == 1 and cur == [line]
+    assert history.load(str(tmp_path / "missing.jsonl")) == []
+
+
+def test_history_metrics_flatten():
+    s = _toy_suite()
+    rec = _rec(grid={"c0": {"sub": {"tps": 100.0}, "waves": 3},
+                     "c1": {"sub": {"tps": 300.0}, "waves": 3},
+                     "c2": {"error": "refused"}})
+    m = REG.history_metrics(s, rec)
+    assert m["tps"] == 1000.0 and m["misses"] == 0
+    assert m["median_sub_tps"] == 200.0       # error cells excluded
+    assert m["median_waves"] == 3             # exact + unanimous -> kept
+    rec["grid"]["c1"]["waves"] = 5            # exact + split -> dropped
+    assert "median_waves" not in REG.history_metrics(s, rec)
+
+
+def test_dashboard_trend_tables():
+    from repro.obs.report import history_tables
+    lines = [{"sha": "abc1234", "dirty": False, "suite": "toy",
+              "schema_rev": SCHEMA_REV, "mode": "fast", "platform": "cpu",
+              "metrics": {"tps": 1000.0}},
+             {"sha": "def5678", "dirty": True, "suite": "toy",
+              "schema_rev": SCHEMA_REV, "mode": "fast", "platform": "cpu",
+              "metrics": {"tps": 1250.0, "misses": 0}}]
+    out = history_tables(lines)
+    assert "[toy] 2 run(s)" in out
+    assert "def5678*" in out                  # dirty worktree marker
+    row0 = next(l for l in out.splitlines() if "abc1234" in l)
+    assert row0.rstrip().endswith("-")        # later-added metric backfills
+    assert "no history lines" in history_tables([])
+
+
+def test_run_suite_stamps_record_and_history(tmp_path):
+    name = "_scratch_run"
+    s = REG.register_suite(name, doc="end-to-end scratch suite")
+    try:
+        @REG.register_benchmark(s, "unit")
+        def _unit(ctx):
+            n = ctx.size(4, 64, key="n")
+            ctx.record["tps"] = 100.0 * n
+            ctx.record["grid"] = {"c0": {"waves": 2}}
+            ctx.rows.append(("unit", n))
+
+        REG.register_metric(s, "tps")
+        REG.register_metric(s, "waves", scope="cell", direction="exact")
+        hist = str(tmp_path / "hist.jsonl")
+        rows = []
+        record, path = REG.run_suite(
+            name, fast=True, out=str(tmp_path / "r.json"),
+            history_path=hist, rows=rows)
+        # the returned record is the STAMPED one consumers load
+        assert record == load_bench(path, expect_suite=name)
+        assert record["run"] == {"mode": "fast", "params": {"n": 4}}
+        assert rows == [("unit", 4)]
+        lines = history.load(hist)
+        assert len(lines) == 1
+        assert lines[0]["metrics"] == {"tps": 400.0, "median_waves": 2}
+        # a suite run gates cleanly against itself
+        failures, _ = compare_records(s, record, record)
+        assert not failures
+        # benchmark filtering: nothing selected -> empty record body
+        record2, _ = REG.run_suite(name, fast=True,
+                                   out=str(tmp_path / "r2.json"),
+                                   append_history=False, benchmarks=[])
+        assert "tps" not in record2
+        assert history.load(hist) == lines    # no new line
+    finally:
+        REG._SUITES.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting: synthetic decomposition + the compiled-artifact check
+# ---------------------------------------------------------------------------
+
+def test_routed_exchange_stats_synthetic():
+    from repro.obs import cost as C
+    # two 7-array exchanges on a 2-device mesh, 704 B each
+    rec = {"collective_counts": {"all-to-all": 2 * C.A2A_ARRAYS_PER_EXCHANGE},
+           "collectives": {"all-to-all": 2 * 704.0}}
+    stats = C.routed_exchange_stats(rec, devices=2)
+    assert stats == {"n_exchanges": 2, "bytes_per_exchange": 704.0,
+                     "bucket_bytes_per_device": 352.0}
+    out = C.crosscheck_routed_read_bytes(rec, 2, max_reads=8,
+                                         expected_per_device=8 * 352)
+    assert out["routed_read_bytes_per_device_hlo"] == 2816
+    with pytest.raises(ValueError, match="!= hand-computed"):
+        C.crosscheck_routed_read_bytes(rec, 2, 8, 2817)
+    bad = {"collective_counts": {"all-to-all": 13},
+           "collectives": {"all-to-all": 1.0}}
+    with pytest.raises(ValueError, match="do not decompose"):
+        C.routed_exchange_stats(bad, devices=2)
+
+
+def test_cache_misses_probe():
+    from repro.obs import cost as C
+
+    class _Jitted:
+        def _cache_size(self):
+            return 3
+
+    assert C.cache_misses(_Jitted(), expected_compiles=1) == 2
+    assert C.cache_misses(lambda: None) == -1   # no jit cache -> visible gap
+
+
+@needs_mesh
+def test_hlo_collective_bytes_match_hand_computed_payload():
+    """The tentpole cross-check, end to end on a real 2-device mesh: lower
+    the dist execute phase, walk its post-SPMD HLO, and require the
+    all-to-all-derived routed payload to equal PR 7's hand-computed
+    ``routed_read_bytes_per_device`` exactly."""
+    import dataclasses
+
+    from benchmarks import dist_bench as DB
+    from repro.core import workloads as W
+    from repro.launch.mesh import make_mesh
+    from repro.obs import cost as C
+
+    REG.load_suites()
+    suite = REG.get_suite("dist")
+    ctx = REG.RunContext(fast=True, params={"n_txns": 128})
+    suite.benchmarks["exchange_cost"].fn(ctx)
+
+    d = ctx.record["cost_devices"]
+    assert d >= 2
+    ex = ctx.record["cost"]["execute"]
+    rx = ex["routed_exchange"]
+    # the exchange structure decomposes into whole 7-array exchanges
+    assert ex["collective_counts"]["all-to-all"] == \
+        rx["n_exchanges"] * C.A2A_ARRAYS_PER_EXCHANGE
+    assert rx["bytes_per_exchange"] == d * rx["bucket_bytes_per_device"]
+
+    # independently rebuild the hand-computed side from the same cell
+    vm, params, storage, cfg = W.make_mixed_block(
+        W.MixedSpec(), 128, seed=7, n_locs=10**5, zipf_s=1.1,
+        backend="sharded", n_shards=DB.REGIONS_PER_DEVICE * d)
+    dcfg = dataclasses.replace(cfg, dist=True,
+                               mesh=make_mesh("regions", (d,)))
+    expected = DB.exec_lane_stats(dcfg, d)["routed_read_bytes_per_device"]
+    assert rx["routed_read_bytes_per_device_hlo"] == expected
+    assert rx["bucket_bytes_per_device"] * dcfg.max_reads == expected
+    # and the gate holds it: the metric is declared exact on the record
+    m = suite.metrics[
+        "cost.execute.routed_exchange.routed_read_bytes_per_device_hlo"]
+    assert m.direction == "exact"
+    assert REG._dig(ctx.record, m.name) == expected
